@@ -1,0 +1,54 @@
+"""Paper Table 7 — hybrid-analyzer configuration study.
+
+Offline overhead and selection quality for the analyzer configurations:
+CPU default (E: L0) vs changed (E: L0,L1); TPU default (E: L0,L1 via the
+calibrated table) vs changed (E: L0) vs analytical-only.  Quality is the
+predicted-cost regret of the selected strategies vs the configuration's own
+best (lower overhead usually costs selection quality — the paper's
+trade-off).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import GemmWorkload, HOST_CPU, TPU_V5E, VortexGemm
+from benchmarks.util import emit
+
+N, K = 768, 1152
+MS = [7, 40, 128, 300, 777]
+
+
+def main() -> None:
+    wl = GemmWorkload(M=None, N=N, K=K)
+    configs = [
+        ("cpu/E_L0", HOST_CPU, (0,), ("simd",)),
+        ("cpu/E_L0L1", HOST_CPU, (0, 1), ("simd",)),
+        ("tpu/E_L0L1", TPU_V5E, (0, 1), ("mxu",)),
+        ("tpu/E_L0", TPU_V5E, (0,), ("mxu",)),
+        ("tpu/analytical", TPU_V5E, (), ("mxu",)),
+    ]
+    preds = {}
+    for name, hw, levels, backends in configs:
+        t0 = time.perf_counter()
+        eng = VortexGemm(hw, wl, empirical_levels=levels, backends=backends)
+        offline = time.perf_counter() - t0
+        cost = float(np.mean([eng.select(m).predicted_cost for m in MS]))
+        preds[name] = cost
+        emit(
+            f"analyzer/{name}", offline * 1e6,
+            f"measured={eng.offline_stats.num_measured};"
+            f"mean_predicted_cost={cost:.3e}",
+        )
+    # Relative quality of tpu configs vs the default (E: L0,L1).
+    base = preds["tpu/E_L0L1"]
+    for name in ("tpu/E_L0", "tpu/analytical"):
+        emit(
+            f"analyzer/{name}/regret", 0.0,
+            f"predicted_cost_ratio={preds[name] / base:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

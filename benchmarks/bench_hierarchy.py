@@ -1,0 +1,138 @@
+"""Paper Fig. 15 — hierarchical kernel construction ablation.
+
+Vortex (dynamic strategies at every level) vs:
+  * Vortex-Static1: the L0 child is frozen to one tile; L1 stays dynamic
+    (the lattice is re-scored with only that child available);
+  * Vortex-Static2: L0 AND L1 frozen — one strategy for every shape;
+  * Vortex-Oracle: per-shape exhaustive wall-clock search over the lattice
+    buckets (Vortex run as a static-shape compiler with profiling).
+
+Reported as fraction of Oracle wall-clock (paper: 94.7% / 60.7% / 49.5%).
+All variants share one memoized executable factory so compile time never
+contaminates the steady-state numbers.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import math
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core.analyzer import HybridAnalyzer, WallClockProfiler
+from repro.core.candidates import CandidateLattice, generate_lattice
+from repro.core.selector import RuntimeSelector
+from benchmarks.util import emit, time_call
+
+N, K = 512, 1024
+MS = [3, 17, 40, 77, 128, 200, 311, 450]
+
+
+@functools.lru_cache(maxsize=None)
+def _exe(mp: int):
+    fn = jax.jit(
+        lambda a, b: jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())))
+    )
+    a = jnp.zeros((mp, K), jnp.float32)
+    b = jnp.zeros((K, N), jnp.float32)
+    fn(a, b).block_until_ready()
+    return fn
+
+
+def _run_padded(mp: int, a, b):
+    m = a.shape[0]
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+    out = _exe(mp)(a, b)
+    return out[:m] if mp != m else out
+
+
+def _measure(tile_for, mats):
+    out = {}
+    for m, (a, b) in mats.items():
+        tm = tile_for(m)
+        mp = math.ceil(m / tm) * tm
+        out[m] = time_call(lambda a_, b_: _run_padded(mp, a_, b_), a, b,
+                           repeats=3)
+    return out
+
+
+def main() -> None:
+    wl = GemmWorkload(M=None, N=N, K=K)
+    vortex = VortexGemm(HOST_CPU, wl)
+    backend = HOST_CPU.default_backend
+    rng = np.random.default_rng(0)
+    mats = {
+        m: (
+            jnp.asarray(rng.normal(size=(m, K)), jnp.float32),
+            jnp.asarray(rng.normal(size=(K, N)), jnp.float32),
+        )
+        for m in MS
+    }
+
+    # Oracle: per-shape best wall-clock over the lattice's m-tile buckets.
+    tiles = sorted({
+        int(t[0]) for t in vortex.selector._scored[backend].l1_tiles
+    })
+    tiles = [t for t in tiles if t <= 1024][:10]
+    oracle_t = {}
+    for m in MS:
+        a, b = mats[m]
+        best = float("inf")
+        for tm in tiles:
+            mp = math.ceil(m / tm) * tm
+            best = min(best, time_call(
+                lambda a_, b_: _run_padded(mp, a_, b_), a, b, repeats=3
+            ))
+        oracle_t[m] = best
+
+    # Vortex: dynamic at every level.
+    vortex_t = _measure(
+        lambda m: vortex.select(m).strategy.l1[0], mats
+    )
+
+    # Static1: freeze L0 to the globally most-chosen child; rescore the
+    # lattice with only that child, keep runtime L1 selection dynamic.
+    # "Most frequently optimal" is computed over the full workload range
+    # (paper Table 3 includes training-scale M up to 1.9M), so the frozen
+    # choice is biased to large shapes — exactly why it hurts small ones.
+    sels = [vortex.select(m) for m in MS + [512, 1024, 2048, 4096, 8192]]
+    l0_common = collections.Counter(
+        s.strategy.tiles[0] for s in sels
+    ).most_common(1)[0][0]
+    full = generate_lattice(HOST_CPU, wl, backend)
+    kept = {
+        l1: (l0_common,)
+        for l1 in full.l1
+        if all(a % b == 0 for a, b in zip(l1, l0_common))
+    }
+    frozen = CandidateLattice(
+        backend=backend,
+        layers=((l0_common,), tuple(kept)),
+        children=({}, kept),
+    )
+    scored1 = HybridAnalyzer(
+        HOST_CPU, wl, profiler=WallClockProfiler(), empirical_levels=(0,)
+    ).score(frozen)
+    sel1 = RuntimeSelector(HOST_CPU, wl, {backend: scored1})
+    static1_t = _measure(lambda m: sel1.select(m).strategy.l1[0], mats)
+
+    # Static2: freeze L0 and L1 to the single most-chosen full strategy.
+    l1_common = collections.Counter(
+        s.strategy.l1 for s in sels
+    ).most_common(1)[0][0]
+    static2_t = _measure(lambda m: l1_common[0], mats)
+
+    def frac(ts):
+        return float(np.mean([oracle_t[m] / ts[m] for m in MS]))
+
+    emit("hierarchy/vortex", 0.0, f"frac_of_oracle={frac(vortex_t):.3f}")
+    emit("hierarchy/static1", 0.0, f"frac_of_oracle={frac(static1_t):.3f}")
+    emit("hierarchy/static2", 0.0, f"frac_of_oracle={frac(static2_t):.3f}")
+
+
+if __name__ == "__main__":
+    main()

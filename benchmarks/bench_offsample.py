@@ -1,0 +1,47 @@
+"""Paper Fig. 3 / Table 6 — off-sample degradation of sample-driven tuning.
+
+The sample-driven compiler is tuned for M in [128, 256) (the paper's
+Table 6 setup); runtime M sweeps [1, 384).  Vortex (sample-free) must show
+a larger advantage on the ranges OUTSIDE the tuned window.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core.baselines import SampleDrivenCompiler
+from benchmarks.util import emit, time_call
+
+N, K = 768, 2304 // 2  # paper's BERT GEMM (K halved to stay CPU-friendly)
+
+
+def main() -> None:
+    wl = GemmWorkload(M=None, N=N, K=K)
+    vortex = VortexGemm(HOST_CPU, wl)
+    sampled = SampleDrivenCompiler(
+        HOST_CPU, wl, samples=[128, 160, 192, 224, 255],
+        search_budget=3, repeats=2,
+    )
+    rng = np.random.default_rng(1)
+    ranges = {"in[128,256)": range(130, 256, 25),
+              "out[0,128)": range(5, 128, 24),
+              "out[256,384)": range(260, 384, 25)}
+    for label, ms in ranges.items():
+        sps, pads = [], []
+        for m in ms:
+            a = jnp.asarray(rng.normal(size=(m, K)), jnp.float32)
+            b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+            t_v = time_call(vortex, a, b, repeats=3)
+            t_s = time_call(sampled, a, b, repeats=3)
+            sps.append(t_s / t_v)
+            pads.append(sampled.padded_m(m) / m)
+        emit(
+            f"offsample/{label}", 0.0,
+            f"avg_speedup={np.mean(sps):.2f};"
+            f"avg_pad_ratio_sampled={np.mean(pads):.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

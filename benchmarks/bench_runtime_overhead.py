@@ -1,0 +1,47 @@
+"""Paper Fig. 14 — runtime overhead breakdown.
+
+The Vortex runtime cost-model evaluation must be microseconds-scale and a
+negligible fraction of kernel execution.  We time the selector in isolation
+(cold = first evaluation of a new M, warm = cached) and compare against the
+matmul execution time across M/N/K.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from benchmarks.util import emit, time_call
+
+
+def main() -> None:
+    for size in (64, 256, 1024):
+        wl = GemmWorkload(M=None, N=size, K=size)
+        eng = VortexGemm(HOST_CPU, wl)
+        # cold selection: fresh M values
+        t0 = time.perf_counter()
+        n_cold = 200
+        for m in range(1, n_cold + 1):
+            eng.selector.select(m)
+        cold_us = (time.perf_counter() - t0) / n_cold * 1e6
+        # warm selection: cached M
+        t0 = time.perf_counter()
+        for _ in range(n_cold):
+            eng.selector.select(7)
+        warm_us = (time.perf_counter() - t0) / n_cold * 1e6
+        # kernel execution at a representative M
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(size=(size, size)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(size, size)), jnp.float32)
+        exec_us = time_call(eng, a, b) * 1e6
+        emit(
+            f"runtime_overhead/MNK{size}", exec_us,
+            f"select_cold_us={cold_us:.1f};select_warm_us={warm_us:.2f};"
+            f"overhead_frac={cold_us / max(exec_us, 1e-9):.3f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

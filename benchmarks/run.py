@@ -1,0 +1,54 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Each prints ``name,us_per_call,derived`` CSV lines (benchmarks/util.emit).
+
+  bench_gemm             Fig. 12 / Table 5  operator-level speedups
+  bench_offsample        Fig. 3  / Table 6  off-sample degradation
+  bench_models           Fig. 13            model-level dynamic shapes
+  bench_compile_time     §7.4               offline overhead
+  bench_hierarchy        Fig. 15            static/dynamic ablation
+  bench_analyzer         Table 7            hybrid analyzer configs
+  bench_adaptive         Fig. 16            MXU/VPU adaptation
+  bench_runtime_overhead Fig. 14            selection overhead
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_compile_time",
+    "bench_runtime_overhead",
+    "bench_adaptive",
+    "bench_analyzer",
+    "bench_gemm",
+    "bench_offsample",
+    "bench_hierarchy",
+    "bench_models",
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            importlib.import_module(f"benchmarks.{name}").main()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Shared timing utilities for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_call", "emit"]
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Best-of-N wall-clock seconds for fn(*args) (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV line per benchmark result: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,52 @@
+"""Dynamic-shape LM serving with Vortex bucketing.
+
+    PYTHONPATH=src python examples/dynamic_serving.py
+
+A stream of requests with random batch sizes and prompt lengths (the
+paper's dynamic-shape serving scenario).  Without bucketing, every distinct
+(batch, prompt) shape would force an XLA recompile; the Vortex lattice maps
+the stream onto a small bucket set.  The same driver also reports the
+off-bucket padding waste, which the lattice bounds by construction.
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import Request, VortexServer
+from repro.models.registry import get_smoke_config
+
+
+def main() -> None:
+    cfg = get_smoke_config("paper-gpt2-124m")
+    server = VortexServer(cfg, make_host_mesh(), max_cache=256)
+    rng = np.random.default_rng(7)
+
+    n_requests, total_pad = 24, 0.0
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        b = int(rng.integers(1, 9))
+        s = int(rng.integers(4, 120))
+        toks = rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)
+        out = server.generate(Request(tokens=toks, max_new=4))
+        bp = server._batch_bucket(b)
+        sp = server._bucket(s)
+        total_pad += (bp * sp) / (b * s) - 1.0
+        print(f"req {i:2d}: ({b:2d},{s:3d}) -> bucket ({bp:2d},{sp:3d}) "
+              f"out {out.shape}")
+    dt = time.perf_counter() - t0
+    print(
+        f"\n{n_requests} dynamic requests in {dt:.1f}s — "
+        f"{server.stats['prefill_compiles']} compiled buckets, "
+        f"{server.stats['bucket_hits']} bucket hits, "
+        f"avg padding overhead {total_pad / n_requests:.1%}"
+    )
+    print("A sample-driven system tuned for one shape list would pay either "
+          "a recompile or an off-sample penalty for most of these.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Architecture configs — one module per assigned architecture.
+
+Every module exports ``CONFIG`` (the exact assigned config) and ``SMOKE``
+(a reduced same-family config for CPU smoke tests).  ``repro.models.registry``
+maps ``--arch <id>`` to these.
+"""

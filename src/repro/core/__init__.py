@@ -1,0 +1,39 @@
+"""Vortex core: hardware-driven, sample-free dynamic-shape tensor-program
+optimization (the paper's contribution), adapted to TPU. See DESIGN.md."""
+from repro.core.analyzer import (
+    AnalyticalProfiler,
+    HybridAnalyzer,
+    Profiler,
+    ScoredLattice,
+    TableProfiler,
+    WallClockProfiler,
+)
+from repro.core.baselines import SampleDrivenCompiler, VendorBaseline
+from repro.core.candidates import (
+    CandidateLattice,
+    filter_by_isa,
+    filter_by_multiples,
+    generate_lattice,
+    init_cands,
+)
+from repro.core.cost_model import (
+    CostBreakdown,
+    gemm_runtime_costs,
+    gemm_strategy_cost,
+    l0_analytical_cost,
+)
+from repro.core.engine import OfflineStats, VortexEngine, VortexGemm
+from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec, get_hardware
+from repro.core.rkernel import (
+    AnalyzeType,
+    GemmWorkload,
+    LayerMetaInfo,
+    LoopType,
+    RKernelProgram,
+    Strategy,
+    interpret_gemm,
+    make_gemm_program,
+)
+from repro.core.selector import RuntimeSelector, Selection
+
+__all__ = [n for n in dir() if not n.startswith("_")]

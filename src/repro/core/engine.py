@@ -1,0 +1,239 @@
+"""VortexEngine: the end-to-end sample-free compiler (paper Fig. 6).
+
+Offline stage (no shape samples anywhere):
+  1. top-down: describe the workload as an rKernel program (rkernel.py),
+  2. bottom-up: generate the hardware-pruned candidate lattice per backend
+     (candidates.py, Algorithm 2),
+  3. score it with the hybrid analyzer (analyzer.py).
+
+Runtime stage:
+  4. given the actual shape, select strategy + launch geometry + backend
+     (selector.py) via the analytical model only,
+  5. construct/fetch the executable for the induced bucket and run.
+
+Execution backends:
+  * ``xla``    — lax.dot_general on the bucket shape (host-CPU execution in
+                 this container; what the benchmarks time),
+  * ``pallas`` — the Vortex-tiled Pallas TPU kernel (kernels/gemm.py) with
+                 BlockSpecs taken from the selected strategy; runs in
+                 interpret mode off-TPU and compiles natively on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analyzer import (
+    HybridAnalyzer,
+    Profiler,
+    ScoredLattice,
+    TableProfiler,
+    WallClockProfiler,
+)
+from repro.core.candidates import generate_lattice
+from repro.core.hardware import HardwareSpec, get_hardware
+from repro.core.rkernel import GemmWorkload, Strategy, make_gemm_program
+from repro.core.selector import RuntimeSelector, Selection
+
+__all__ = ["OfflineStats", "VortexGemm", "VortexEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OfflineStats:
+    """Offline-stage accounting (paper §7.4 'Offline Overhead Analysis')."""
+
+    num_candidates: int
+    num_measured: int
+    build_seconds: float
+    backends: tuple[str, ...]
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    fn: Callable
+    compile_seconds: float
+    hits: int = 0
+
+
+class VortexGemm:
+    """One dynamic-shape GEMM workload, compiled sample-free.
+
+    N and K are static (weights side); M is dynamic.  This is the unit the
+    paper evaluates (BERT GEMMs with M = batch*seq).
+    """
+
+    def __init__(
+        self,
+        hw: HardwareSpec,
+        wl: GemmWorkload,
+        profiler: Profiler | None = None,
+        empirical_levels: tuple[int, ...] = (0,),
+        backends: tuple[str, ...] | None = None,
+        num_cores: int = 1,
+        impl: str = "xla",
+        interpret: bool = True,
+    ):
+        self._hw = hw
+        self._wl = wl
+        self._impl = impl
+        self._interpret = interpret
+        t0 = time.perf_counter()
+        backends = backends or tuple(hw.backends)
+        scored: dict[str, ScoredLattice] = {}
+        n_cands = 0
+        n_meas = 0
+        for backend in backends:
+            lattice = generate_lattice(hw, wl, backend)
+            n_cands += lattice.num_candidates()
+            analyzer = HybridAnalyzer(
+                hw, wl, profiler=profiler, empirical_levels=empirical_levels
+            )
+            sl = analyzer.score(lattice)
+            n_meas += sl.num_measured
+            scored[backend] = sl
+        self.selector = RuntimeSelector(hw, wl, scored, num_cores=num_cores)
+        self.offline_stats = OfflineStats(
+            num_candidates=n_cands,
+            num_measured=n_meas,
+            build_seconds=time.perf_counter() - t0,
+            backends=backends,
+        )
+        self._exec_cache: dict[tuple, _CacheEntry] = {}
+
+    # -- executable construction ------------------------------------------
+
+    def _build_executable(self, sel: Selection) -> _CacheEntry:
+        mp = sel.padded_m
+        N, K = self._wl.N, self._wl.K
+        if self._impl == "pallas":
+            from repro.kernels import gemm as gemm_kernel
+
+            m1, n1, k1 = sel.strategy.l1
+
+            def fn(a, b):
+                return gemm_kernel.vortex_gemm(
+                    a, b, block_m=m1, block_n=min(n1, N), block_k=min(k1, K),
+                    interpret=self._interpret,
+                )
+
+        else:
+
+            def fn(a, b):
+                return jax.lax.dot_general(
+                    a, b, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).astype(a.dtype)
+
+        jfn = jax.jit(fn)
+        t0 = time.perf_counter()
+        a = jnp.zeros((mp, K), jnp.float32)
+        b = jnp.zeros((K, N), jnp.float32)
+        jfn(a, b).block_until_ready()
+        return _CacheEntry(fn=jfn, compile_seconds=time.perf_counter() - t0)
+
+    def _entry_for(self, sel: Selection) -> _CacheEntry:
+        key = (sel.padded_m, sel.strategy.l1, sel.backend, self._impl)
+        entry = self._exec_cache.get(key)
+        if entry is None:
+            entry = self._build_executable(sel)
+            self._exec_cache[key] = entry
+        entry.hits += 1
+        return entry
+
+    # -- public API ---------------------------------------------------------
+
+    def select(self, m: int) -> Selection:
+        return self.selector.select(m)
+
+    def precompile(self, m_max: int) -> int:
+        """Precompile every bucket reachable for M <= m_max (sample-free:
+        the bucket set comes from the lattice, not from shape samples)."""
+        n = 0
+        for m in self.selector.buckets_upto(m_max):
+            self._entry_for(self.selector.select(m))
+            n += 1
+        return n
+
+    def __call__(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Dynamic-shape matmul: pad M to the selected bucket, run, slice."""
+        m = a.shape[0]
+        sel = self.select(m)
+        entry = self._entry_for(sel)
+        if sel.padded_m != m:
+            a = jnp.pad(a, ((0, sel.padded_m - m), (0, 0)))
+        out = entry.fn(a, b)
+        return out[:m] if sel.padded_m != m else out
+
+    @property
+    def cache_info(self) -> dict:
+        return {
+            "entries": len(self._exec_cache),
+            "hits": sum(e.hits for e in self._exec_cache.values()),
+        }
+
+
+class VortexEngine:
+    """Engine over many workloads: one VortexGemm per (N, K, dtype) signature.
+
+    Model layers request matmuls through :meth:`gemm`; signatures are built
+    lazily but *without* any dependence on the dynamic dim — first use of a
+    new (N, K) builds its lattice once, after which every runtime M is
+    served from the same scored lattice (sample-free across all M).
+    """
+
+    def __init__(
+        self,
+        hardware: str = "host_cpu",
+        profiler: Profiler | None = None,
+        empirical_levels: tuple[int, ...] | None = None,
+        backends: tuple[str, ...] | None = None,
+        impl: str = "xla",
+        num_cores: int = 1,
+    ):
+        self._hw = get_hardware(hardware)
+        if profiler is None:
+            profiler = (
+                WallClockProfiler() if hardware == "host_cpu"
+                else TableProfiler(self._hw)
+            )
+        if empirical_levels is None:
+            # Paper defaults (Table 7): E:L0 on CPU; E:L0,L1 on GPU-class HW.
+            empirical_levels = (0,) if hardware == "host_cpu" else (0, 1)
+        self._profiler = profiler
+        self._empirical_levels = tuple(empirical_levels)
+        self._backends = backends
+        self._impl = impl
+        self._num_cores = num_cores
+        self._gemms: dict[tuple[int, int], VortexGemm] = {}
+
+    def gemm_for(self, n: int, k: int) -> VortexGemm:
+        key = (n, k)
+        if key not in self._gemms:
+            wl = GemmWorkload(M=None, N=n, K=k)
+            self._gemms[key] = VortexGemm(
+                self._hw,
+                wl,
+                profiler=self._profiler,
+                empirical_levels=self._empirical_levels,
+                backends=self._backends,
+                num_cores=self._num_cores,
+                impl=self._impl,
+            )
+        return self._gemms[key]
+
+    def gemm(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return self.gemm_for(b.shape[1], b.shape[0])(a, b)
+
+    def offline_stats(self) -> OfflineStats:
+        stats = [g.offline_stats for g in self._gemms.values()]
+        return OfflineStats(
+            num_candidates=sum(s.num_candidates for s in stats),
+            num_measured=sum(s.num_measured for s in stats),
+            build_seconds=sum(s.build_seconds for s in stats),
+            backends=stats[0].backends if stats else (),
+        )

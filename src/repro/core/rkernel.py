@@ -1,0 +1,247 @@
+"""rKernel: the unified recursive abstraction (paper §4, Algorithm 1, Fig. 10).
+
+A tensor program is decomposed into hierarchical layers.  Each layer owns
+three loop sets — Parallel (PL), Temporal-Spatial (TSL) and
+Temporal-Reduction (TRL) — and three stages: ``Load``, the recursive
+``rKernel(L-1)``, and ``Store``.  The layer metadata mirrors the paper's
+``layer_meta_info`` struct verbatim (Fig. 10): depth, per-axis loop types,
+the analyzer kind used at that layer, and the load/store/compute hooks.
+
+Two things live here:
+
+  * the declarative metadata (:class:`LayerMetaInfo`, :class:`RKernelProgram`)
+    consumed by the candidate generator, analyzer and code generator, and
+  * :func:`interpret` — a pure-Python reference interpreter of Algorithm 1,
+    used by the test-suite to check that the hierarchical decomposition of a
+    workload computes exactly what the flat definition computes, for any
+    strategy drawn from the candidate lattice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+
+__all__ = [
+    "LoopType",
+    "AnalyzeType",
+    "LayerMetaInfo",
+    "RKernelProgram",
+    "Strategy",
+    "GemmWorkload",
+    "interpret_gemm",
+]
+
+
+class LoopType(enum.Enum):
+    """Loop classification at one layer (Algorithm 1)."""
+
+    PARALLEL = "PL"
+    TEMPORAL_SPATIAL = "TSL"
+    TEMPORAL_REDUCTION = "TRL"
+
+
+class AnalyzeType(enum.Enum):
+    """Which analyzer evaluates strategies at a layer (paper Fig. 10)."""
+
+    EMPIRICAL = "empirical"
+    ANALYTICAL = "analytical"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMetaInfo:
+    """Metadata for one rKernel layer (paper Fig. 10 ``layer_meta_info``).
+
+    ``load_func``/``store_func``/``compute_func`` are *names* resolved by the
+    code generator (kernels/) rather than function pointers: the same program
+    description must drive both the Pallas TPU lowering and the reference
+    interpreter.
+    """
+
+    layer_depth: int
+    loop_type: Mapping[str, LoopType]
+    analyzer: AnalyzeType
+    load_func: str
+    store_func: str
+    compute_func: str
+
+    def axes_of(self, kind: LoopType) -> tuple[str, ...]:
+        return tuple(a for a, t in self.loop_type.items() if t is kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmWorkload:
+    """A (possibly dynamic) GEMM: C[M, N] = A[M, K] @ B[K, N].
+
+    ``dynamic_dims`` lists the dims unknown until runtime (for LM inference
+    that is M = batch*seq; N and K are weights-side and static).
+    """
+
+    M: int | None
+    N: int
+    K: int
+    dtype_bytes: int = 2
+    acc_bytes: int = 4
+    dynamic_dims: tuple[str, ...] = ("M",)
+
+    def flops(self, m: int | None = None) -> float:
+        m = self.M if m is None else m
+        assert m is not None
+        return 2.0 * m * self.N * self.K
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return ("m", "n", "k")
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """A fully-specified hierarchical strategy: one tile per rKernel layer.
+
+    ``tiles[d]`` is the (m, n, k) tile computed by ONE instance at depth d.
+    Invariant (paper §5.1, Fig. 8): every dim of ``tiles[d+1]`` is an integer
+    multiple of the corresponding dim of ``tiles[d]``.
+    ``backend`` selects the level-0 compute unit (mxu vs vpu; §6.2).
+    """
+
+    tiles: tuple[tuple[int, int, int], ...]
+    backend: str = "mxu"
+
+    def __post_init__(self) -> None:
+        for lo, hi in zip(self.tiles, self.tiles[1:]):
+            for a, b in zip(lo, hi):
+                if b % a:
+                    raise ValueError(
+                        f"strategy violates the multiples invariant: {hi} is "
+                        f"not an elementwise multiple of {lo}"
+                    )
+
+    @property
+    def l0(self) -> tuple[int, int, int]:
+        return self.tiles[0]
+
+    @property
+    def l1(self) -> tuple[int, int, int]:
+        return self.tiles[-1]
+
+
+def make_gemm_program(hw: HardwareSpec) -> RKernelProgram:
+    """The rKernel description of GEMM on ``hw`` (paper Fig. 7 / Table 1)."""
+    layers = []
+    names = [lvl.name for lvl in hw.levels]
+    for depth, name in enumerate(names):
+        if depth == 0:
+            load, store, compute = "load_tile_to_reg", "store_reg", "dot"
+        elif depth == 1:
+            load, store, compute = "copy_hbm_to_vmem", "copy_vmem_to_hbm", ""
+        else:
+            load, store, compute = "", "", ""
+        layers.append(
+            LayerMetaInfo(
+                layer_depth=depth,
+                loop_type={
+                    "m": LoopType.PARALLEL if depth == hw.num_levels - 1
+                    else LoopType.TEMPORAL_SPATIAL,
+                    "n": LoopType.PARALLEL if depth == hw.num_levels - 1
+                    else LoopType.TEMPORAL_SPATIAL,
+                    "k": LoopType.TEMPORAL_REDUCTION,
+                },
+                analyzer=AnalyzeType.EMPIRICAL if depth == 0
+                else AnalyzeType.ANALYTICAL,
+                load_func=load,
+                store_func=store,
+                compute_func=compute,
+            )
+        )
+    return RKernelProgram(kind="gemm", layers=tuple(layers), hardware=hw.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class RKernelProgram:
+    """A tensor program decomposed per Algorithm 1: one LayerMetaInfo per
+    hardware level, innermost first."""
+
+    kind: str
+    layers: tuple[LayerMetaInfo, ...]
+    hardware: str
+
+    @property
+    def depth(self) -> int:
+        return len(self.layers)
+
+
+# ---------------------------------------------------------------------------
+# Reference interpreter of Algorithm 1 (for tests).
+# ---------------------------------------------------------------------------
+
+
+def interpret_gemm(
+    a: np.ndarray, b: np.ndarray, strategy: Strategy
+) -> np.ndarray:
+    """Execute GEMM through the recursive rKernel structure, literally.
+
+    Follows Algorithm 1: at each layer, iterate parallel loops, then temporal
+    spatial loops, then temporal reduction loops; Load the operand tiles,
+    recurse, Store.  Inputs are padded to the outermost tile (runtime padding
+    is confined to the outermost level — Fig. 8's integer-multiples design),
+    and the padding is sliced off the result.
+
+    This is deliberately slow and simple; it is the semantic oracle that the
+    Pallas lowering and the cost model's loop-count bookkeeping are tested
+    against.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    m1, n1, k1 = strategy.l1
+
+    def pad_to(x: np.ndarray, m: int, n: int) -> np.ndarray:
+        pm = (-x.shape[0]) % m
+        pn = (-x.shape[1]) % n
+        return np.pad(x, ((0, pm), (0, pn)))
+
+    ap = pad_to(a.astype(np.float32), m1, k1)
+    bp = pad_to(b.astype(np.float32), k1, n1)
+    Mp, Kp = ap.shape
+    _, Np = bp.shape
+    out = np.zeros((Mp, Np), np.float32)
+
+    def rkernel(depth: int, a_t: np.ndarray, b_t: np.ndarray) -> np.ndarray:
+        """rKernel(depth) over already-Loaded tiles (Algorithm 1 recursion)."""
+        if depth < 0:
+            raise AssertionError("recursed past level 0")
+        tm, tn, tk = strategy.tiles[depth]
+        if depth == 0:
+            # compute_func: the native tile contraction ("the instruction").
+            return a_t @ b_t
+        sm, sn, sk = strategy.tiles[depth - 1]
+        acc = np.zeros((tm, tn), np.float32)
+        for i in range(tm // sm):           # temporal spatial (m)
+            for j in range(tn // sn):       # temporal spatial (n)
+                for kk in range(tk // sk):  # temporal reduction (k)
+                    # Load_Func: slice the child tiles out of this layer's
+                    # memory (VMEM->VREG at depth 1, HBM->VMEM at depth 2).
+                    a_s = a_t[i * sm : (i + 1) * sm, kk * sk : (kk + 1) * sk]
+                    b_s = b_t[kk * sk : (kk + 1) * sk, j * sn : (j + 1) * sn]
+                    acc[i * sm : (i + 1) * sm, j * sn : (j + 1) * sn] += (
+                        rkernel(depth - 1, a_s, b_s)
+                    )
+                    # Store_Func: accumulate back into this layer's buffer.
+        return acc
+
+    top = len(strategy.tiles) - 1
+    # Outermost (grid) level: parallel loops over (m, n), temporal reduction
+    # over k — each instance Loads its HBM tiles and recurses.
+    for i in range(Mp // m1):
+        for j in range(Np // n1):
+            for kk in range(Kp // k1):
+                a_t = ap[i * m1 : (i + 1) * m1, kk * k1 : (kk + 1) * k1]
+                b_t = bp[kk * k1 : (kk + 1) * k1, j * n1 : (j + 1) * n1]
+                out[i * m1 : (i + 1) * m1, j * n1 : (j + 1) * n1] += rkernel(
+                    top, a_t, b_t
+                )
+    return out[:M, :N]

@@ -1,0 +1,115 @@
+"""Runtime strategy selection and kernel construction (paper §6.2).
+
+At runtime the shape becomes known.  The selector evaluates the (small,
+pre-scored) candidate lattice with the *analytical* grid-level model —
+including the padding-waste that a given layer-1 tile implies for this shape
+— and returns the winning strategy plus launch geometry.  When multiple
+compute backends exist (MXU vs VPU here; Tensor vs CUDA core in the paper),
+the selector compares their best candidates and routes adaptively (Fig. 16).
+
+Selection is pure numpy over precomputed arrays: the overhead budget is the
+microseconds regime of the paper's Fig. 14.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.analyzer import ScoredLattice
+from repro.core.cost_model import gemm_runtime_costs
+from repro.core.hardware import HardwareSpec
+from repro.core.rkernel import GemmWorkload, Strategy
+
+__all__ = ["Selection", "RuntimeSelector"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """A constructed kernel for one runtime shape."""
+
+    strategy: Strategy
+    backend: str
+    grid: tuple[int, int, int]            # (gm, gn, gk) launch geometry
+    padded_m: int                          # M rounded up to the l1 m-tile
+    predicted_cost: float                  # seconds (analytical)
+    select_seconds: float                  # runtime scheduling overhead
+
+    @property
+    def bucket(self) -> tuple[int, int, int]:
+        """The executable-cache key shape: padding is confined to M (the
+        dynamic dim) and only up to the lattice tile — the sample-free
+        bucketing induced by the candidate lattice (DESIGN.md §2)."""
+        m1, n1, k1 = self.strategy.l1
+        return (self.padded_m, self.grid[1] * n1, self.grid[2] * k1)
+
+
+class RuntimeSelector:
+    """Select strategies for runtime shapes from pre-scored lattices.
+
+    ``scored`` maps backend name -> ScoredLattice.  ``num_cores`` is the
+    number of level-2 units the kernel may occupy (per-shard TensorCores).
+    """
+
+    def __init__(
+        self,
+        hw: HardwareSpec,
+        wl: GemmWorkload,
+        scored: Mapping[str, ScoredLattice],
+        num_cores: int = 1,
+    ):
+        if not scored:
+            raise ValueError("need at least one scored lattice")
+        self._hw = hw
+        self._wl = wl
+        self._scored = dict(scored)
+        self._num_cores = num_cores
+        self._cache: dict[int, Selection] = {}
+
+    def select(self, m_runtime: int) -> Selection:
+        """Pick the (backend, strategy) minimizing predicted cost at M."""
+        if m_runtime in self._cache:
+            return self._cache[m_runtime]
+        t0 = time.perf_counter()
+        best: tuple[float, str, int] | None = None
+        for backend, sl in self._scored.items():
+            costs = gemm_runtime_costs(
+                self._hw, self._wl, sl.l1_tiles, sl.l1_costs,
+                m_runtime, self._num_cores,
+            )
+            idx = int(np.argmin(costs))
+            cand = (float(costs[idx]), backend, idx)
+            if best is None or cand[0] < best[0]:
+                best = cand
+        assert best is not None
+        cost, backend, idx = best
+        sl = self._scored[backend]
+        strategy = sl.strategy_for(idx)
+        m1, n1, k1 = strategy.l1
+        grid = (
+            math.ceil(m_runtime / m1),
+            math.ceil(self._wl.N / n1),
+            math.ceil(self._wl.K / k1),
+        )
+        sel = Selection(
+            strategy=strategy,
+            backend=backend,
+            grid=grid,
+            padded_m=grid[0] * m1,
+            predicted_cost=cost,
+            select_seconds=time.perf_counter() - t0,
+        )
+        self._cache[m_runtime] = sel
+        return sel
+
+    def buckets_upto(self, m_max: int) -> list[int]:
+        """All distinct padded-M buckets the selector can emit for M in
+        [1, m_max] — the finite, sample-free precompilation set for serving.
+        """
+        out = set()
+        for m in range(1, m_max + 1):
+            out.add(self.select(m).padded_m)
+        return sorted(out)

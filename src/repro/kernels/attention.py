@@ -1,0 +1,151 @@
+"""Flash-attention Pallas TPU kernel with Vortex-selected block sizes.
+
+Attention's two contractions (QK^T and PV) are GEMMs whose dynamic dim is the
+sequence length — exactly the paper's dynamic-M case.  The (block_q, block_k)
+pair is drawn from the Vortex layer-1 lattice (m-tile for queries, k-tile for
+keys), so the same sample-free bucketing governs attention and plain GEMMs.
+
+Supports causal masking, sliding-window attention (h2o-danube, gemma2 local
+layers) and GQA (kv heads shared across query-head groups via the BlockSpec
+index map).  TARGET: TPU; validated on CPU with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, gkv: int, block_q: int, block_k: int, scale: float,
+    causal: bool, window: int | None, softcap: float | None,
+):
+    """One (head, q-block): stream kv blocks, online softmax in VMEM scratch."""
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (block_q, d)
+    k = k_ref[0]  # (block_k, d)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == gkv - 1)
+    def _store():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_q", "block_k", "causal", "window", "softcap", "interpret",
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-head attention.
+
+    Args:
+      q: (batch, q_heads, seq, head_dim)
+      k, v: (batch, kv_heads, seq, head_dim); q_heads % kv_heads == 0 (GQA).
+      block_q/block_k: Vortex layer-1 tiles for the sequence dims.
+      window: sliding-window size (keys within [q-window+1, q]).
+      softcap: gemma2-style logit soft-capping applied to QK^T scores.
+    Returns (batch, q_heads, seq, head_dim).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError(
+            f"seq lens ({sq},{skv}) not aligned to blocks ({block_q},{block_k})"
+        )
+    gq, gkv = sq // block_q, skv // block_k
+    scale = d ** -0.5
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        gkv=gkv, block_q=block_q, block_k=block_k, scale=scale,
+        causal=causal, window=window, softcap=softcap,
+    )
+
+    def kv_map(h, i, j):
+        del i
+        return (h // group, j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, gq, gkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,46 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container and compile natively on TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attention import flash_attention
+from repro.kernels.conv import vortex_conv2d
+from repro.kernels.gemm import vortex_gemm
+
+__all__ = ["matmul", "attention", "conv2d", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(a, b, *, block_m=128, block_n=128, block_k=128, interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return vortex_gemm(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+def attention(
+    q, k, v, *, block_q=128, block_k=128, causal=True, window=None,
+    softcap=None, interpret=None,
+):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return flash_attention(
+        q, k, v, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, softcap=softcap, interpret=interpret,
+    )
+
+
+def conv2d(x, w, *, stride=1, block_m=128, block_n=128, block_k=128,
+           interpret=None):
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return vortex_conv2d(
+        x, w, stride=stride, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )

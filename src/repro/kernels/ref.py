@@ -1,0 +1,199 @@
+"""Pure-jnp oracles for every Pallas kernel, plus the compile-friendly
+chunked attention the model layer uses inside scanned transformer blocks.
+
+These are the semantic ground truth: the test-suite sweeps shapes/dtypes and
+asserts the Pallas kernels (interpret mode) match these to tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ref_gemm",
+    "ref_attention",
+    "chunked_attention",
+    "ref_conv2d",
+    "ref_conv1d",
+]
+
+
+def ref_gemm(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return out.astype(out_dtype or a.dtype)
+
+
+def _mask(
+    sq: int, skv: int, causal: bool, window: int | None, offset: int = 0
+) -> jax.Array:
+    """(sq, skv) boolean mask. ``offset`` is the absolute position of query 0
+    (decode: offset = cache_len for a single new token)."""
+    q_pos = offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), jnp.bool_)
+    if causal:
+        m &= k_pos <= q_pos
+    if window is not None:
+        m &= q_pos - k_pos < window
+    return m
+
+
+def ref_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    offset: int = 0,
+) -> jax.Array:
+    """Exact attention with full score materialization (oracle only).
+
+    Shapes as kernels/attention.py: q (b, hq, sq, d); k, v (b, hkv, skv, d).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1) if group > 1 else k
+    vx = jnp.repeat(v, group, axis=1) if group > 1 else v
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * (d ** -0.5)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    m = _mask(sq, skv, causal, window, offset)
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    chunk: int = 1024,
+    offset: int = 0,
+    rules=None,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure JAX (lax.scan over kv
+    chunks).  Never materializes the (sq, skv) score matrix, so the compiled
+    artifact's memory stays linear in seq — this is what the model layers use
+    (the Pallas kernel is the TPU-native version of the same loop).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hkv
+    if skv <= chunk:
+        return ref_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            offset=offset,
+        )
+    skv_true = skv
+    pad = -skv % chunk
+    if pad:  # pad keys/values; padded positions are masked out below
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        skv = skv + pad
+    n_chunks = skv // chunk
+    scale = d ** -0.5
+
+    # Sharding pins for the scan body.  Without them XLA's propagation can
+    # settle on sharding the CONTRACTED head_dim over 'data' (seen under
+    # FSDP on deepseek-v2), all-reducing the full f32 score block on every
+    # chunk step (§Perf A3: 2x8.2 TB/device/step).
+    def pin(t):
+        # Only pin when the head count actually divides the TP axis —
+        # otherwise "heads_act" resolves to None and the pin would force
+        # FULL replication over 'model' (observed: 10x regression on
+        # phi4-mini prefill, 24 heads on a 16-wide axis).
+        if rules is None or rules.rules.get("heads_act") is None:
+            return t
+        from repro.models.partitioning import constrain
+
+        return constrain(t, rules, "batch", "heads_act", None, None)
+
+    def pin5(t):
+        # Stacked scan xs (n_chunks, b, h, chunk, d): pinning the primal
+        # keeps the scan-transposed cotangent heads-sharded too (otherwise
+        # the bwd accumulates a full f32 all-gather over heads per step).
+        if rules is None or rules.rules.get("kv_heads_act") is None:
+            return t
+        from repro.models.partitioning import constrain
+
+        return constrain(t, rules, None, "batch", "kv_heads_act", None, None)
+
+    qf = pin(q.astype(jnp.float32))
+    dk = k.shape[-1]
+    kc = pin5(k.reshape(b, hkv, n_chunks, chunk, dk).transpose(2, 0, 1, 3, 4))
+    vc = pin5(v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4))
+
+    q_pos = offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, ci = xs
+        if group > 1:
+            kb = jnp.repeat(kb, group, axis=1)
+            vb = jnp.repeat(vb, group, axis=1)
+        kb = pin(kb.astype(jnp.float32))
+        vb = pin(vb.astype(jnp.float32))
+        s = pin(jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = ci * chunk + jnp.arange(chunk)
+        msk = jnp.broadcast_to(
+            (k_pos < skv_true)[None, :], (sq, chunk)
+        )
+        if causal:
+            msk = msk & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, pin(acc)), None
+
+    init = (
+        jnp.full((b, hq, sq), -1e30, jnp.float32),
+        jnp.zeros((b, hq, sq), jnp.float32),
+        jnp.zeros((b, hq, sq, dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def ref_conv1d(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """(b, t, cin) * (kw, cin, cout) -> (b, t', cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding=padding,
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def ref_conv2d(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """(b, h, w, cin) * (kh, kw, cin, cout) -> (b, h', w', cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

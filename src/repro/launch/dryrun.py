@@ -1,0 +1,286 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, and derive the roofline terms.
+
+MUST be invoked as its own process (``python -m repro.launch.dryrun``) so
+the XLA_FLAGS line above runs before jax initializes devices.
+
+For each cell:
+  * build the abstract inputs (ShapeDtypeStructs — no allocation),
+  * jit the appropriate step (train_step / prefill_step / decode_step) with
+    explicit in/out shardings from the partitioning rules,
+  * ``.lower().compile()`` on the 16x16 mesh and (with --multi-pod) the
+    2x16x16 mesh — success proves the sharding config is coherent,
+  * record memory_analysis / cost_analysis / trip-corrected HLO costs and
+    the three roofline terms into a JSON results file (incremental, so a
+    long sweep can resume).
+(No ``from __future__ import annotations`` here: the os.environ assignment
+must be the first executable statement in the file.)
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.models.params import abstract_params, count_params, param_pspecs
+from repro.models.partitioning import make_rules, spec_tree_to_shardings
+from repro.models.registry import ARCH_IDS, cell_supported, get_config
+from repro.optim.adamw import adamw_init, opt_state_pspecs
+from repro.roofline.analysis import V5E, roofline_report
+from repro.roofline.memory import tree_device_bytes
+from repro.train.step import (
+    TrainHParams,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    serve_input_specs,
+    train_input_specs,
+)
+
+DEFAULT_OUT = "results/dryrun.json"
+
+
+def _microbatches(cfg: ModelConfig, shape: ShapeSpec, dp_extent: int) -> int:
+    """Gradient-accumulation factor: keep the per-microbatch logits block
+    (mb x seq x vocab) and MoE dispatch buffers inside the HBM budget,
+    while the per-microbatch batch still covers every DP shard (a smaller
+    microbatch would replicate compute across part of the mesh)."""
+    if shape.kind != "train":
+        return 1
+    mb = 8
+    # Very large vocab: accumulate more (the f32 logits block dominates).
+    # (Large-expert MoE previously also used 16; §Perf A5 halved it — FSDP
+    # weight re-gather traffic scales linearly with the microbatch count
+    # and the MoE dispatch buffers fit comfortably at mb=8.)
+    if cfg.vocab >= 200000:
+        mb = 16
+    mb = min(mb, max(shape.global_batch // max(dp_extent, 1), 1))
+    while shape.global_batch % mb:
+        mb //= 2
+    return max(mb, 1)
+
+
+def _count_active(cfg: ModelConfig) -> int:
+    return cfg.active_param_count()
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    do_compile: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    rules = make_rules(
+        mesh, fsdp=cfg.fsdp, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads
+    )
+    axis_sizes = dict(mesh.shape)
+
+    params = abstract_params(cfg)
+    p_specs = param_pspecs(cfg, rules)
+    p_sh = spec_tree_to_shardings(mesh, p_specs)
+
+    t0 = time.perf_counter()
+    extra_bytes = 0.0
+    if shape.kind == "train":
+        dp_extent = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+        hp = TrainHParams(
+            num_microbatches=_microbatches(cfg, shape, dp_extent)
+        )
+        step = make_train_step(cfg, rules, hp, grad_pspecs=p_specs)
+        opt = adamw_init(params)
+        o_specs = opt_state_pspecs(
+            p_specs, params, axis_sizes.get("data", 1), zero1=True
+        )
+        o_sh = spec_tree_to_shardings(mesh, o_specs)
+        batch, b_pspecs = train_input_specs(cfg, shape, rules)
+        b_sh = spec_tree_to_shardings(mesh, b_pspecs)
+        metrics_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+        )
+        lowered = jitted.lower(params, opt, batch)
+        state_bytes = (
+            tree_device_bytes(params, p_specs, axis_sizes)
+            + tree_device_bytes(opt["mu"], o_specs["mu"], axis_sizes)
+            + tree_device_bytes(opt["nu"], o_specs["nu"], axis_sizes)
+            + tree_device_bytes(params, p_specs, axis_sizes)  # grads
+        )
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, rules, cache_len=shape.seq_len)
+        batch, b_pspecs = serve_input_specs(cfg, shape, rules)
+        b_sh = spec_tree_to_shardings(mesh, b_pspecs)
+        c_specs = M.cache_pspecs(cfg, rules, shape.global_batch, shape.seq_len)
+        c_sh = spec_tree_to_shardings(mesh, c_specs)
+        jitted = jax.jit(
+            step, in_shardings=(p_sh, b_sh), out_shardings=(None, c_sh)
+        )
+        lowered = jitted.lower(params, batch)
+        cache = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        state_bytes = (
+            tree_device_bytes(params, p_specs, axis_sizes)
+            + tree_device_bytes(cache, c_specs, axis_sizes)
+        )
+    else:  # decode
+        step = make_decode_step(cfg, rules, cache_len=shape.seq_len)
+        cache = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_specs = M.cache_pspecs(cfg, rules, shape.global_batch, shape.seq_len)
+        c_sh = spec_tree_to_shardings(mesh, c_specs)
+        inputs, i_pspecs = serve_input_specs(cfg, shape, rules)
+        tok_sh = spec_tree_to_shardings(mesh, i_pspecs["tokens"])
+        pos_sh = NamedSharding(mesh, P())
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+            out_shardings=(None, c_sh),
+        )
+        lowered = jitted.lower(
+            params, cache, inputs["tokens"], inputs["pos"]
+        )
+        state_bytes = (
+            tree_device_bytes(params, p_specs, axis_sizes)
+            + tree_device_bytes(cache, c_specs, axis_sizes)
+        )
+
+    lower_s = time.perf_counter() - t0
+    result: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "params": count_params(cfg),
+        "active_params": _count_active(cfg),
+        "state_bytes_per_device": state_bytes,
+        "state_gib_per_device": state_bytes / 2**30,
+        "lower_seconds": lower_s,
+    }
+    if not do_compile:
+        return result
+
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    result["compile_seconds"] = time.perf_counter() - t1
+
+    try:
+        ma = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            k: getattr(ma, k)
+            for k in dir(ma)
+            if not k.startswith("_")
+            and isinstance(getattr(ma, k, None), (int, float))
+        }
+    except Exception as e:  # backend may not support it
+        result["memory_analysis"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        ca = {}
+
+    hlo = compiled.as_text()
+    report = roofline_report(
+        arch=arch,
+        shape=shape,
+        mesh_name=mesh_name,
+        chips=chips,
+        hlo_text=hlo,
+        cost_analysis=ca,
+        cfg=cfg,
+        params=result["params"],
+        active_params=result["active_params"],
+        chip=V5E,
+    )
+    result["roofline"] = report.as_dict()
+    result["hlo_bytes"] = len(hlo)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument(
+        "--mesh", choices=["single", "multi", "both"], default="both"
+    )
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in the results file")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: dict[str, dict] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            ok, reason = cell_supported(arch, shape_name)
+            for multi in meshes:
+                key = f"{arch}|{shape_name}|{'multi' if multi else 'single'}"
+                if key in results and not args.force and (
+                    "error" not in results[key]
+                ):
+                    continue
+                if not ok:
+                    results[key] = {
+                        "arch": arch, "shape": shape_name,
+                        "mesh": "pod2x16x16" if multi else "pod16x16",
+                        "skipped": reason,
+                    }
+                    print(f"[skip] {key}: {reason}")
+                else:
+                    print(f"[cell] {key} ...", flush=True)
+                    try:
+                        t0 = time.perf_counter()
+                        results[key] = lower_cell(
+                            arch, shape_name, multi_pod=multi,
+                            do_compile=not args.no_compile,
+                        )
+                        dt = time.perf_counter() - t0
+                        r = results[key].get("roofline", {})
+                        print(
+                            f"       ok in {dt:.1f}s  dominant="
+                            f"{r.get('dominant')}  state/dev="
+                            f"{results[key]['state_gib_per_device']:.2f}GiB",
+                            flush=True,
+                        )
+                    except Exception as e:
+                        n_fail += 1
+                        results[key] = {
+                            "arch": arch, "shape": shape_name,
+                            "mesh": "pod2x16x16" if multi else "pod16x16",
+                            "error": f"{type(e).__name__}: {e}",
+                            "traceback": traceback.format_exc()[-2000:],
+                        }
+                        print(f"       FAILED: {e}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"done; {n_fail} failures; results in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

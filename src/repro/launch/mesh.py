@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh: 16x16 single-pod (256 chips) or
+    2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """A tiny mesh over the locally attached devices (tests / examples)."""
+    n = data * model
+    devs = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))

@@ -1,0 +1,161 @@
+"""Dynamic-shape serving driver — where Vortex earns its keep at runtime.
+
+Requests arrive with arbitrary batch sizes and prompt lengths.  XLA needs
+static shapes, so every distinct (batch, prompt_len) would recompile.  The
+Vortex runtime selector (core/selector.py) instead pads each request up to
+the nearest *lattice bucket* — the sample-free bucket set derived offline
+from hardware limits — so the executable cache stays small and padding
+waste is bounded by the lattice spacing (paper Fig. 8 argument applied at
+the serving layer).
+
+``python -m repro.launch.serve --arch paper-gpt2-124m --smoke --requests 16``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GemmWorkload, VortexGemm, get_hardware
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.models.params import init_params
+from repro.models.partitioning import make_rules
+from repro.models.registry import get_config, get_smoke_config
+from repro.train.step import make_decode_step, make_prefill_step
+
+__all__ = ["VortexServer", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    tokens: np.ndarray  # (batch, prompt_len)
+    max_new: int = 8
+
+
+class VortexServer:
+    """Batched LM serving with Vortex-bucketed dynamic shapes.
+
+    The dynamic dims are the request batch size and the prompt length; both
+    are padded to Vortex lattice buckets before hitting the compiled
+    prefill/decode executables.
+    """
+
+    def __init__(self, cfg, mesh, *, max_cache: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.rules = make_rules(
+            mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads
+        )
+        self.params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.max_cache = max_cache
+        # Vortex engine over the token dim: N/K from the model's GEMM
+        # signature; the selector's M-buckets become our batch/seq buckets.
+        # The lattice is built for the TARGET hardware (TPU v5e): its native
+        # sublane granularity (16) is what quantizes the bucket set — on the
+        # CPU host the same buckets are used so executables dedupe the same
+        # way they would on the pod.
+        hw = get_hardware("tpu_v5e")
+        wl = GemmWorkload(M=None, N=cfg.d_model, K=cfg.d_model)
+        self._vortex = VortexGemm(hw, wl, backends=("mxu",))
+        self._prefill = {}
+        self._decode = jax.jit(
+            make_decode_step(cfg, self.rules, cache_len=max_cache)
+        )
+        self.stats = {"prefill_compiles": 0, "bucket_hits": 0}
+
+    def _bucket(self, n: int) -> int:
+        """Vortex-selected padded size for the sequence extent."""
+        return self._vortex.select(max(n, 1)).padded_m
+
+    @staticmethod
+    def _batch_bucket(b: int) -> int:
+        """Batch buckets are powers of two: the batch dim multiplies every
+        GEMM's M jointly with seq, so quantizing it to the MXU sublane
+        granularity would double-pad; pow2 keeps the executable cache small
+        with <=2x waste on the batch factor alone."""
+        p = 1
+        while p < b:
+            p *= 2
+        return p
+
+    def _prefill_fn(self, b: int, s: int):
+        key = (b, s)
+        if key not in self._prefill:
+            self._prefill[key] = jax.jit(
+                make_prefill_step(self.cfg, self.rules, self.max_cache)
+            )
+            self.stats["prefill_compiles"] += 1
+        else:
+            self.stats["bucket_hits"] += 1
+        return self._prefill[key]
+
+    def generate(self, req: Request) -> np.ndarray:
+        b, s = req.tokens.shape
+        bp = self._batch_bucket(b)
+        sp = min(self._bucket(s), self.max_cache)
+        toks = np.zeros((bp, sp), np.int32)
+        toks[:b, :s] = req.tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.vision_prefix:
+            batch["vision_embeds"] = jnp.zeros(
+                (bp, self.cfg.vision_prefix, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype),
+            )
+        if self.cfg.encoder_decoder:
+            batch["encoder_frames"] = jnp.zeros(
+                (bp, self.cfg.encoder_seq, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype),
+            )
+        logits, cache = self._prefill_fn(bp, sp)(self.params, batch)
+        out = [np.asarray(jnp.argmax(logits, -1))]
+        tok = jnp.asarray(out[-1][:, None])
+        pos = s - 1
+        for i in range(req.max_new - 1):
+            pos += 1
+            logits, cache = self._decode(
+                self.params, cache, tok, jnp.asarray(pos, jnp.int32)
+            )
+            nxt = jnp.argmax(logits, -1)
+            out.append(np.asarray(nxt))
+            tok = nxt[:, None]
+        return np.stack(out, 1)[:b]  # (b, max_new)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-gpt2-124m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh()
+    server = VortexServer(cfg, mesh, max_cache=256)
+    rng = np.random.default_rng(args.seed)
+
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        b = int(rng.integers(1, 9))
+        s = int(rng.integers(4, 65))
+        req = Request(
+            tokens=rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+            max_new=args.max_new,
+        )
+        out = server.generate(req)
+        print(f"req {i:3d}: batch={b:3d} prompt={s:3d} -> {out.shape}")
+    dt = time.perf_counter() - t0
+    print(
+        f"{args.requests} dynamic requests in {dt:.1f}s; "
+        f"compiles={server.stats['prefill_compiles']} "
+        f"bucket_hits={server.stats['bucket_hits']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

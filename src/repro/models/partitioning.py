@@ -1,0 +1,180 @@
+"""Logical-axis partitioning rules (MaxText-style) for all architectures.
+
+Parameters and activations carry *logical* axis names; a rules table maps
+them onto the physical mesh axes ("pod", "data", "model").  GSPMD handles
+non-divisible dims by padding, but the rules below prefer divisible mappings
+(e.g. replicating a 12-head axis rather than unevenly splitting it 16 ways).
+
+Parallelism summary (DESIGN.md §5):
+  DP   — batch over ("pod", "data")
+  TP   — heads / ff / vocab / experts over "model" (Megatron column/row)
+  EP   — expert axis over "model"
+  FSDP — the non-TP weight axis over "data" for archs with fsdp=True
+  SP   — sequence over "model" at layer boundaries (activation constraint)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AxisRules",
+    "logical_to_pspec",
+    "make_rules",
+    "spec_tree_to_shardings",
+    "constrain",
+]
+
+# Logical axis names used by the param schema / activation constraints.
+#   batch     activation batch dim
+#   seq       activation sequence dim (SP at layer boundaries)
+#   embed     d_model axis of weights (FSDP axis when enabled)
+#   q_heads   flattened n_heads*head_dim weight axis (TP)
+#   kv_heads  flattened n_kv_heads*head_dim weight axis (TP if divisible)
+#   heads_act per-head activation axis
+#   ff        feed-forward hidden axis (TP)
+#   vocab     vocabulary axis (TP)
+#   expert    MoE expert axis (EP)
+#   layers    stacked-layer leading axis (never sharded)
+#   ssm_inner mamba d_inner axis (TP)
+#   none      explicitly replicated
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping from logical axis names to physical mesh axes."""
+
+    rules: Mapping[str, Any]
+    mesh_axes: tuple[str, ...]
+    axis_sizes: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    mesh: Any = None  # concrete Mesh for NamedSharding constraints
+
+    def resolve(self, logical: Sequence[str | None]) -> P:
+        out = []
+        for name in logical:
+            if name is None or name == "none":
+                out.append(None)
+            else:
+                out.append(self.rules.get(name))
+        # Trim trailing Nones for a canonical spec.
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def _extent(self, part: Any) -> int:
+        names = part if isinstance(part, tuple) else (part,)
+        n = 1
+        for name in names:
+            n *= self.axis_sizes.get(name, 1)
+        return n
+
+    def sanitize(self, spec: P, shape: Sequence[int]) -> P:
+        """Drop sharded axes that do not divide the dim evenly — jit input
+        shardings must divide; a dropped axis means 'replicate that dim'.
+        Also drops repeated uses of one mesh axis (a spec may name each
+        axis at most once)."""
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        used: set = set()
+        for i, part in enumerate(parts):
+            if part is None:
+                continue
+            names = list(part) if isinstance(part, tuple) else [part]
+            # Degrade tuple axes gracefully: ('pod','data') on a dim of 16
+            # keeps ('data',) rather than dropping sharding entirely (which
+            # replicated whole residual streams on the multi-pod mesh).
+            while names and (
+                shape[i] % self._extent(tuple(names))
+                or any(n in used for n in names)
+            ):
+                names.pop(0)
+            if not names:
+                parts[i] = None
+            else:
+                parts[i] = tuple(names) if len(names) > 1 else names[0]
+                used.update(names)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def spec_for(self, shape: Sequence[int],
+                 logical: Sequence[str | None]) -> P:
+        return self.sanitize(self.resolve(logical), shape)
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    n_heads: int = 0,
+    n_kv_heads: int = 0,
+) -> AxisRules:
+    """Build the rules table for one (mesh, architecture) pair.
+
+    ``batch`` spans every data-parallel axis present ("pod" and "data").
+    Head *activation* axes shard only when the head count divides the model
+    axis; the flattened weight axes always shard (they are large multiples
+    of 128).
+    """
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    batch = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None
+    )
+    model = "model" if "model" in axes else None
+    model_size = mesh.shape["model"] if model else 1
+    heads_act = model if n_heads and n_heads % max(model_size, 1) == 0 else None
+    kv_heads_act = (
+        model if n_kv_heads and n_kv_heads % max(model_size, 1) == 0 else None
+    )
+    rules = {
+        "batch": batch,
+        "seq": model,           # sequence parallelism at layer boundaries
+        "embed": "data" if (fsdp and "data" in axes) else None,
+        "q_heads": model,
+        "kv_heads": model,
+        "heads_act": heads_act,
+        "kv_heads_act": kv_heads_act,
+        "ff": model,
+        "vocab": model,
+        "expert": model,
+        "ssm_inner": model,
+        "layers": None,
+    }
+    return AxisRules(
+        rules=rules,
+        mesh_axes=tuple(axes),
+        axis_sizes=dict(mesh.shape),
+        mesh=mesh if isinstance(mesh, Mesh) else None,
+    )
+
+
+def logical_to_pspec(rules: AxisRules, logical: Sequence[str | None]) -> P:
+    return rules.resolve(logical)
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constrain(x: jax.Array, rules: AxisRules, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint via logical names.
+
+    Resolves to a NamedSharding against the rules' concrete mesh — a bare
+    PartitionSpec needs an ambient ``with mesh:`` context and silently
+    raising/no-op'ing here is how sharding bugs hide.  The spec is sanitized
+    against the value's shape (non-divisible dims replicate).
+    """
+    if rules.mesh is None:
+        return x
+    spec = rules.sanitize(rules.resolve(logical), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )

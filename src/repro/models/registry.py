@@ -1,0 +1,67 @@
+"""--arch <id> registry: maps architecture ids to configs + shape skips.
+
+``cell_supported(arch, shape)`` encodes the assignment's skip rules:
+  * ``long_500k`` needs sub-quadratic attention (SSM / hybrid / SWA),
+  * decode shapes are skipped for encoder-only archs (none assigned here;
+    whisper's decoder is autoregressive so it keeps decode).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+
+__all__ = [
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke_config",
+    "cell_supported",
+    "all_cells",
+]
+
+_MODULES = {
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "whisper-small": "repro.configs.whisper_small",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "paper-gpt2-124m": "repro.configs.paper_gpt2",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(
+    k for k in _MODULES if k != "paper-gpt2-124m"
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).SMOKE
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) for one (arch x shape) cell."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape]
+    if spec.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch} is full-attention (see DESIGN.md §4)"
+        )
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch, shape) cells, including skipped ones."""
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]

@@ -1,0 +1,14 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    opt_state_pspecs,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    ef_compress_update,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,135 @@
+"""AdamW in pure JAX with ZeRO-style optimizer-state sharding.
+
+Optimizer moments are f32 regardless of param dtype (bf16 training).  With
+``fsdp`` the moments inherit the params' FSDP sharding (params are already
+sharded over 'data'); without it, :func:`opt_state_pspecs` can still shard
+the moments over 'data' on the largest divisible axis (ZeRO-1): gradients
+arrive replicated, the update runs on the shard, and XLA all-gathers the
+fresh params — exactly the reduce-scatter/all-gather dance of ZeRO, derived
+by GSPMD from the output sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_pspecs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> dict:
+    def zeros_like_f32(p):
+        if isinstance(p, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "mu": jax.tree.map(zeros_like_f32, params),
+        "nu": jax.tree.map(zeros_like_f32, params),
+        "step": (
+            jax.ShapeDtypeStruct((), jnp.int32)
+            if any(
+                isinstance(l, jax.ShapeDtypeStruct)
+                for l in jax.tree.leaves(params)
+            )
+            else jnp.zeros((), jnp.int32)
+        ),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    opt_state: dict,
+    lr: jax.Array,
+) -> tuple[Any, dict]:
+    """One AdamW step with global-norm clipping.  Returns (params, state)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        # Decoupled weight decay only on matrices (ndim >= 2).
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def _shard_spec_for_moment(spec: P, shape: tuple[int, ...],
+                           data_divisor: int) -> P:
+    """ZeRO-1: add 'data' to the first unsharded axis divisible by the data
+    axis; keep the param's own spec otherwise."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if any(p == "data" or (isinstance(p, tuple) and "data" in p)
+           for p in parts):
+        return spec  # FSDP params: moments inherit
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None and dim % data_divisor == 0 and dim >= data_divisor:
+            parts[i] = "data"
+            while parts and parts[-1] is None:
+                parts.pop()
+            return P(*parts)
+    return spec
+
+
+def opt_state_pspecs(
+    param_specs: Any, param_shapes: Any, data_axis_size: int, zero1: bool = True
+) -> dict:
+    """PartitionSpec tree for the optimizer state."""
+    if zero1 and data_axis_size > 1:
+        moment = jax.tree.map(
+            lambda s, p: _shard_spec_for_moment(s, p.shape, data_axis_size),
+            param_specs,
+            param_shapes,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    else:
+        moment = param_specs
+    return {"mu": moment, "nu": moment, "step": P()}

@@ -1,0 +1,49 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DCN) hop.
+
+At 512 chips the intra-pod gradient reduce-scatter rides the ICI, but the
+pod-to-pod hop crosses the (much slower) data-center network.  Compressing
+that hop 4x (f32 -> int8 with a per-tensor scale) with error feedback
+(Seide et al.; Karimireddy et al.) keeps convergence intact: the
+quantization residual is carried into the next step's gradient.
+
+The train step uses this inside a ``shard_map`` over the 'pod' axis when
+``compress_dcn=True``: grads are psum'd over ('data',) normally, quantized,
+psum'd over ('pod',), dequantized — see train/step.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ef_compress_update"]
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(
+    grad: jax.Array, error: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compression of one gradient tensor.
+
+    Returns (q, scale, new_error, compressed_grad) where
+    ``compressed_grad = dequant(q, scale)`` and
+    ``new_error = (grad + error) - compressed_grad``.
+    """
+    target = grad.astype(jnp.float32) + error
+    q, scale = compress_int8(target)
+    approx = decompress_int8(q, scale)
+    new_error = target - approx
+    return q, scale, new_error, approx

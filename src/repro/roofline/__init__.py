@@ -1,0 +1,10 @@
+from repro.roofline.hlo_parse import ModuleCosts, parse_hlo_costs
+from repro.roofline.analysis import RooflineReport, roofline_report, V5E
+
+__all__ = [
+    "ModuleCosts",
+    "parse_hlo_costs",
+    "RooflineReport",
+    "roofline_report",
+    "V5E",
+]

@@ -1,0 +1,139 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+Per the assignment:
+
+    compute term    = per-device FLOPs / peak_FLOP/s        (197 TF bf16)
+    memory term     = per-device HBM bytes / HBM bandwidth  (819 GB/s)
+    collective term = per-device collective bytes / ICI bw  (~50 GB/s/link)
+
+FLOPs/bytes come from the trip-count-corrected HLO parse (hlo_parse.py);
+``compiled.cost_analysis()`` numbers are retained in the report for
+comparison (they undercount while bodies).  MODEL_FLOPS is 6·N·D for
+training (N params, D tokens) and 2·N_active·D for inference steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.roofline.hlo_parse import ModuleCosts, parse_hlo_costs
+
+__all__ = ["V5E", "RooflineReport", "roofline_report", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops: float       # bf16
+    hbm_bw: float           # bytes/s
+    ici_bw: float           # bytes/s per link
+    hbm_bytes: float
+
+
+V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16 * 1024**3,
+)
+
+
+def model_flops(
+    cfg: ModelConfig, shape: ShapeSpec, params: int, active_params: int
+) -> float:
+    """Useful model FLOPs for the whole step (all chips)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * active_params * shape.global_batch
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device, trip-corrected
+    flops: float
+    memory_bytes: float
+    collective_bytes: float
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float       # MODEL_FLOPS / (per-dev flops * chips)
+    mfu_bound: float          # min step time / compute-bound time
+    collective_by_kind: Mapping[str, float]
+    raw_cost_analysis: Mapping[str, float]
+    trip_counts: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    note: str = ""
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def roofline_report(
+    *,
+    arch: str,
+    shape: ShapeSpec,
+    mesh_name: str,
+    chips: int,
+    hlo_text: str,
+    cost_analysis: Mapping[str, float] | None,
+    cfg: ModelConfig,
+    params: int,
+    active_params: int,
+    chip: ChipSpec = V5E,
+    note: str = "",
+) -> RooflineReport:
+    costs = parse_hlo_costs(hlo_text)
+    compute_s = costs.flops / chip.peak_flops
+    memory_s = costs.memory_bytes / chip.hbm_bw
+    collective_s = costs.collective_bytes / chip.ici_bw
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, params, active_params)
+    hlo_total = costs.flops * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    bound = max(terms.values())
+    mfu_bound = compute_s / bound if bound else 0.0
+    raw = dict(cost_analysis or {})
+    raw = {
+        k: float(v) for k, v in raw.items()
+        if isinstance(v, (int, float)) and k in (
+            "flops", "bytes accessed", "transcendentals",
+            "bytes accessed output", "optimal_seconds",
+        )
+    }
+    return RooflineReport(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        flops=costs.flops,
+        memory_bytes=costs.memory_bytes,
+        collective_bytes=costs.collective_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_total=mf,
+        useful_ratio=useful,
+        mfu_bound=mfu_bound,
+        collective_by_kind=dict(costs.collective_by_kind),
+        raw_cost_analysis=raw,
+        trip_counts=dict(costs.while_trip_counts),
+        note=note,
+    )

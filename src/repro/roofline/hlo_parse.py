@@ -1,0 +1,290 @@
+"""HLO text parser: per-device FLOPs, HBM bytes and collective bytes with
+while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified empirically in this container), which under-counts a scanned
+transformer by ~n_layers.  This parser walks the computation call graph
+(ENTRY -> fusions -> while bodies), extracts each while's trip count from
+the integer constant in its condition computation, and accumulates
+
+  * dot / convolution FLOPs (from operand shapes + contracting dims),
+  * a memory-traffic upper bound (operands+outputs of dots, convs and
+    collectives — i.e. the streamed tensors; fused elementwise traffic is
+    folded into these),
+  * collective bytes per kind (all-gather, all-reduce, reduce-scatter,
+    all-to-all, collective-permute), counted at the op's OUTPUT size.
+
+Since the compiled module under SPMD is the per-device program, every
+number is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Mapping
+
+__all__ = ["ModuleCosts", "parse_hlo_costs"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return ([int(d) for d in dims.split(",")] if dims else [], dt)
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape_str: str
+    opcode: str
+    rest: str  # text after the opening paren
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+    shapes: dict  # op name -> shape_str
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    memory_bytes: float
+    collective_bytes: float
+    collective_by_kind: Mapping[str, float]
+    collective_counts: Mapping[str, int]
+    while_trip_counts: Mapping[str, int]
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "memory_bytes": self.memory_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "collective_counts": dict(self.collective_counts),
+            "while_trip_counts": dict(self.while_trip_counts),
+        }
+
+
+def _split_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{",
+                          stripped)
+        if header and not stripped.startswith("//"):
+            cur = _Computation(header.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode, rest = m.groups()
+        cur.ops.append(_Op(name, shape_str, opcode, rest))
+        cur.shapes[name] = shape_str
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    """First-level operand names from an op's argument text."""
+    # cut at the matching close paren level; text may include ), attrs
+    depth = 1
+    out_chars = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out_chars.append(ch)
+    args = "".join(out_chars)
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out = _shape_dims(op.shape_str)
+    if out is None:
+        return 0.0
+    out_dims, _ = out
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contraction size from lhs shape + lhs_contracting_dims
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = _operand_names(op.rest)
+    contract = 1
+    if mc and operands:
+        lhs_shape = comp.shapes.get(operands[0])
+        if lhs_shape:
+            dims = _shape_dims(lhs_shape)
+            if dims:
+                for ci in mc.group(1).split(","):
+                    if ci:
+                        idx = int(ci)
+                        if idx < len(dims[0]):
+                            contract *= dims[0][idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    out = _shape_dims(op.shape_str)
+    if out is None:
+        return 0.0
+    out_elems = 1
+    for d in out[0]:
+        out_elems *= d
+    operands = _operand_names(op.rest)
+    kernel_elems = 1
+    if len(operands) >= 2:
+        ksh = comp.shapes.get(operands[1])
+        if ksh:
+            kd = _shape_dims(ksh)
+            if kd:
+                for d in kd[0]:
+                    kernel_elems *= d
+    mg = re.search(r"feature_group_count=(\d+)", op.rest)
+    groups = int(mg.group(1)) if mg else 1
+    out_feats = out[0][-1] if out[0] else 1
+    # per output element: 2 * (kernel elems / out_features) / groups... use
+    # the standard 2 * out_elems * kernel_elems / (out_feats * groups) * cout?
+    # kernel already includes cin/groups * cout; per out elem work is
+    # kernel_elems / out_features spatial*cin contributions.
+    per_out = kernel_elems / max(out_feats, 1)
+    return 2.0 * out_elems * per_out
+
+
+def _op_stream_bytes(op: _Op, comp: _Computation) -> float:
+    total = _shape_bytes(op.shape_str)
+    for name in _operand_names(op.rest):
+        sh = comp.shapes.get(name)
+        if sh:
+            total += _shape_bytes(sh)
+    return float(total)
+
+
+def _trip_count(cond: _Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = _CONST_RE.search(op.opcode + "(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        else:
+            for m in _CONST_RE.finditer(op.rest):
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_hlo_costs(text: str) -> ModuleCosts:
+    comps = _split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: the computation named like the module, else the last one
+        entry = next(reversed(comps)) if comps else ""
+
+    flops = 0.0
+    mem = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    coll_n: dict[str, int] = defaultdict(int)
+    trips: dict[str, int] = {}
+
+    # NOTE: no memoization — a computation called from N sites must
+    # contribute N times.  The call graph is a shallow DAG (fusions are
+    # leaf computations; while bodies nest at most ~3 deep), so repeated
+    # traversal is cheap.  Guard only against direct self-recursion.
+    stack: list[str] = []
+
+    def visit(name: str, mult: float) -> None:
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        stack.append(name)
+        nonlocal flops, mem
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                flops += mult * _dot_flops(op, comp)
+                mem += mult * _op_stream_bytes(op, comp)
+            elif oc == "convolution":
+                flops += mult * _conv_flops(op, comp)
+                mem += mult * _op_stream_bytes(op, comp)
+            elif any(oc.startswith(c) for c in _COLLECTIVES):
+                kind = next(c for c in _COLLECTIVES if oc.startswith(c))
+                nbytes = _shape_bytes(op.shape_str)
+                coll[kind] += mult * nbytes
+                coll_n[kind] += int(mult)
+                mem += mult * nbytes
+            if oc == "while":
+                mcall = dict(
+                    re.findall(r"(body|condition)=%?([\w\.\-]+)", op.rest)
+                )
+                body, cond = mcall.get("body"), mcall.get("condition")
+                n = _trip_count(comps[cond]) if cond in comps else 1
+                trips[body or op.name] = n
+                if body:
+                    visit(body, mult * n)
+            else:
+                for m in _CALL_RE.finditer(op.rest):
+                    callee = m.group(1)
+                    if callee != name:
+                        visit(callee, mult)
+        stack.pop()
+
+    visit(entry, 1.0)
+    total_coll = sum(coll.values())
+    return ModuleCosts(
+        flops=flops,
+        memory_bytes=mem,
+        collective_bytes=total_coll,
+        collective_by_kind=dict(coll),
+        collective_counts=dict(coll_n),
+        while_trip_counts=trips,
+    )

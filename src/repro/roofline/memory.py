@@ -1,0 +1,51 @@
+"""Analytic per-device memory accounting from (ShapeDtypeStruct, PartitionSpec)
+trees — the "fits in 16 GB/chip" proof for the dry-run, independent of what
+``compiled.memory_analysis()`` exposes on this backend.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["tree_device_bytes", "fits_hbm"]
+
+
+def _leaf_device_bytes(
+    leaf: jax.ShapeDtypeStruct, spec: P, axis_sizes: Mapping[str, int]
+) -> float:
+    total = float(np.prod(leaf.shape) or 1) * np.dtype(leaf.dtype).itemsize
+    div = 1
+    for i, part in enumerate(tuple(spec)):
+        if part is None:
+            continue
+        names = part if isinstance(part, tuple) else (part,)
+        extent = 1
+        for n in names:
+            extent *= axis_sizes.get(n, 1)
+        # GSPMD pads uneven dims; account for the padded shard.
+        dim = leaf.shape[i]
+        shard = math.ceil(dim / extent)
+        div *= dim / max(shard, 1) if shard else 1
+    return total / max(div, 1)
+
+
+def tree_device_bytes(
+    tree: Any, spec_tree: Any, axis_sizes: Mapping[str, int]
+) -> float:
+    leaves = jax.tree.leaves(tree)
+    specs = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(leaves) == len(specs), (len(leaves), len(specs))
+    return sum(
+        _leaf_device_bytes(l, s, axis_sizes) for l, s in zip(leaves, specs)
+    )
+
+
+def fits_hbm(per_device_bytes: float, hbm_bytes: float,
+             headroom: float = 0.9) -> bool:
+    return per_device_bytes <= hbm_bytes * headroom

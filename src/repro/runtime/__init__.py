@@ -1,0 +1,11 @@
+from repro.runtime.heartbeat import StepMonitor
+from repro.runtime.elastic import plan_remesh, RemeshPlan
+from repro.runtime.supervisor import Supervisor, SimulatedFailure
+
+__all__ = [
+    "StepMonitor",
+    "plan_remesh",
+    "RemeshPlan",
+    "Supervisor",
+    "SimulatedFailure",
+]

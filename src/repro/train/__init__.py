@@ -1,0 +1,10 @@
+from repro.train.step import (
+    TrainHParams,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    train_input_specs,
+    serve_input_specs,
+)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

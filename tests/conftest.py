@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run sets its own 512-device flag in its
+# own process); keep any inherited flag from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

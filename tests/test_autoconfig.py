@@ -1,0 +1,34 @@
+"""Vortex-driven framework auto-configuration (core/autoconfig.py)."""
+from repro.core.autoconfig import select_attn_chunk, select_microbatches
+
+
+def test_attn_chunk_is_lattice_aligned_and_bounded():
+    c = select_attn_chunk(seq=32768, head_dim=128, q_rows=4096)
+    assert c % 128 == 0
+    assert 128 <= c <= 32768
+    # VMEM bound: K,V chunk + f32 scores must fit the budget.
+    ws = 2 * c * 128 * 2 + 4096 * c * 4
+    assert ws <= 0.25 * 128 * 1024 * 1024 * 0.5 + 0.25 * 64 * 1024 * 1024
+
+
+def test_attn_chunk_shrinks_with_q_rows():
+    big_q = select_attn_chunk(seq=32768, head_dim=128, q_rows=8192)
+    small_q = select_attn_chunk(seq=32768, head_dim=128, q_rows=256)
+    assert big_q <= small_q
+
+
+def test_microbatches_grow_with_vocab():
+    kw = dict(global_batch=256, seq=4096, d_model=4096,
+              n_data_shards=16, n_model_shards=16)
+    small = select_microbatches(vocab=32000, **kw)
+    big = select_microbatches(vocab=256000, **kw)
+    assert big >= small
+    assert small >= 1 and (small & (small - 1)) == 0  # power of two
+
+
+def test_microbatches_account_for_moe():
+    kw = dict(global_batch=256, seq=4096, d_model=5120, vocab=102400,
+              n_data_shards=16, n_model_shards=16)
+    dense = select_microbatches(**kw)
+    moe = select_microbatches(moe_experts=160, moe_topk=6, **kw)
+    assert moe >= dense

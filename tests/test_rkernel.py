@@ -1,0 +1,52 @@
+"""Algorithm 1 reference interpreter: hierarchical == flat, for any strategy
+drawn from the lattice (hypothesis property)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GemmWorkload, TPU_V5E
+from repro.core.candidates import generate_lattice
+from repro.core.rkernel import Strategy, interpret_gemm, make_gemm_program
+
+WL = GemmWorkload(M=None, N=256, K=256)
+LAT = generate_lattice(TPU_V5E, WL, "mxu")
+_PAIRS = [
+    (child, l1)
+    for l1 in LAT.l1[:24]
+    for child in LAT.children[1][l1][:2]
+]
+
+
+@given(
+    pair=st.sampled_from(_PAIRS),
+    m=st.integers(1, 80),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_interpret_gemm_matches_numpy(pair, m, seed):
+    l0, l1 = pair
+    # Scale tiles down so the test stays fast but keeps the multiples
+    # structure (divide by the native granularity).
+    scale = (8, 64, 64)
+    l0s = tuple(max(a // s, 1) for a, s in zip(l0, scale))
+    l1s = tuple(max(a // s, 1) for a, s in zip(l1, scale))
+    # Re-snap l1 to a multiple of l0 after scaling.
+    l1s = tuple(max(b - (b % a), a) for a, b in zip(l0s, l1s))
+    strat = Strategy(tiles=(l0s, l1s))
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, 24)).astype(np.float32)
+    b = rng.normal(size=(24, 40)).astype(np.float32)
+    out = interpret_gemm(a, b, strat)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_program_structure_matches_hardware():
+    prog = make_gemm_program(TPU_V5E)
+    assert prog.depth == TPU_V5E.num_levels
+    for depth, layer in enumerate(prog.layers):
+        assert layer.layer_depth == depth
+    # k is temporal-reduction everywhere; m,n parallel only at the top.
+    from repro.core.rkernel import LoopType
+
+    top = prog.layers[-1]
+    assert top.loop_type["m"] is LoopType.PARALLEL
+    assert top.loop_type["k"] is LoopType.TEMPORAL_REDUCTION

@@ -1,0 +1,55 @@
+"""Micro-harness: lower grad(chunked_attention) on the 512-dev production
+mesh with deepseek-like shapes and rank collectives, for rapid sharding
+iteration without recompiling the whole model."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+sys.path.insert(0, "src")
+
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import hlo_parse as hp
+from repro.kernels.ref import chunked_attention
+
+variant = sys.argv[1] if len(sys.argv) > 1 else "v0"
+
+mesh = make_production_mesh()
+b, H, S, d, dv = 16, 128, 4096, 192, 128
+
+def loss(q, k, v):
+    out = chunked_attention(q, k, v, causal=True, chunk=1024)
+    return jnp.sum(out.astype(jnp.float32) ** 2)
+
+qkv_spec = P("data", "model", None, None)
+sh = NamedSharding(mesh, qkv_spec)
+
+def run(fn):
+    g = jax.grad(fn, argnums=(0, 1, 2))
+    specs = (jax.ShapeDtypeStruct((b, H, S, d), jnp.bfloat16),
+             jax.ShapeDtypeStruct((b, H, S, d), jnp.bfloat16),
+             jax.ShapeDtypeStruct((b, H, S, dv), jnp.bfloat16))
+    comp = jax.jit(g, in_shardings=(sh, sh, sh),
+                   out_shardings=(sh, sh, sh)).lower(*specs).compile()
+    costs = hp.parse_hlo_costs(comp.as_text())
+    print(f"{variant}: coll {costs.collective_bytes/1e9:.1f} GB/dev  "
+          f"flops {costs.flops/1e12:.2f} TF/dev  mem {costs.memory_bytes/1e9:.1f} GB/dev")
+    for k2, v2 in sorted(costs.collective_by_kind.items(), key=lambda x:-x[1]):
+        print(f"   {k2:20s} {v2/1e9:10.1f} GB")
+
+if variant == "v0":
+    run(loss)
+elif variant == "v1":
+    # remat the whole attention (recompute in bwd instead of saving/psum)
+    run(lambda q, k, v: jnp.sum(
+        jax.checkpoint(
+            lambda q_, k_, v_: chunked_attention(q_, k_, v_, causal=True, chunk=1024)
+        )(q, k, v).astype(jnp.float32) ** 2))
+elif variant == "v2":
+    # constrain q/k/v inside before attention
+    def f(q, k, v):
+        c = lambda t: jax.lax.with_sharding_constraint(t, qkv_spec)
+        out = chunked_attention(c(q), c(k), c(v), causal=True, chunk=1024)
+        out = jax.lax.with_sharding_constraint(out, qkv_spec)
+        return jnp.sum(out.astype(jnp.float32) ** 2)
+    run(f)

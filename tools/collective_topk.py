@@ -1,0 +1,75 @@
+"""Debug tool: compile one dry-run cell and rank its collectives by
+(bytes x trip multiplier). Usage:
+   python tools/collective_topk.py <arch> <shape> [topk]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import lower_cell  # noqa: E402
+import repro.launch.dryrun as dr  # noqa: E402
+from repro.roofline import hlo_parse as hp  # noqa: E402
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    topk = int(sys.argv[3]) if len(sys.argv) > 3 else 15
+    # reuse lower_cell internals but keep the compiled text
+    import repro.launch.dryrun as d
+    from repro.models.registry import get_config
+    cfg = get_config(arch)
+
+    # monkeypatch roofline_report to capture hlo text
+    captured = {}
+    orig = d.roofline_report
+    def wrap(**kw):
+        captured["hlo"] = kw["hlo_text"]
+        return orig(**kw)
+    d.roofline_report = wrap
+    d.lower_cell(arch, shape, multi_pod=(len(sys.argv)>4 and sys.argv[4]=="multi"))
+    text = captured["hlo"]
+
+    comps = hp._split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    rows = []
+
+    def visit(name, mult, path):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if any(oc.startswith(c) for c in hp._COLLECTIVES):
+                nbytes = hp._shape_bytes(op.shape_str)
+                rows.append((nbytes * mult, oc, op.shape_str[:60], mult,
+                             "/".join(path[-2:])))
+            if oc == "while":
+                mc = dict(re.findall(r"(body|condition)=%?([\w\.\-]+)",
+                                     op.rest))
+                n = hp._trip_count(comps[mc["condition"]]) if mc.get(
+                    "condition") in comps else 1
+                if mc.get("body"):
+                    visit(mc["body"], mult * n, path + [f"x{n}"])
+            else:
+                for m2 in hp._CALL_RE.finditer(op.rest):
+                    if m2.group(1) != name:
+                        visit(m2.group(1), mult, path)
+
+    visit(entry, 1.0, ["entry"])
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/dev: {total/1e9:.1f} GB over {len(rows)} op-instances")
+    for b, oc, sh, mult, path in rows[:topk]:
+        print(f"  {b/1e9:9.2f} GB  x{mult:6.0f}  {oc:20s} {sh:60s} [{path}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+sys.path.insert(0, "src")
+import repro.launch.dryrun as d
+
+arch, shape, pat = sys.argv[1], sys.argv[2], sys.argv[3]
+captured = {}
+orig = d.roofline_report
+def wrap(**kw):
+    captured["hlo"] = kw["hlo_text"]
+    return orig(**kw)
+d.roofline_report = wrap
+d.lower_cell(arch, shape, multi_pod=False)
+text = captured["hlo"]
+n = 0
+for line in text.splitlines():
+    if re.search(pat, line):
+        print(line.strip()[:400])
+        n += 1
+        if n >= int(sys.argv[4]) if len(sys.argv) > 4 else n >= 6:
+            break

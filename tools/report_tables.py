@@ -1,0 +1,74 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table from the dry-run
+JSON and splice it over the <!-- ROOFLINE_TABLE --> marker.
+
+    python tools/report_tables.py results/dryrun_final.json [--write]
+"""
+import json
+import sys
+
+
+def table(results: dict) -> str:
+    rows = []
+    head = (
+        "| arch | shape | dominant | compute_s | memory_s | collective_s |"
+        " useful | state GiB/dev | action |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    actions = {
+        ("collective", "train"): "overlap FSDP gathers / fewer microbatches",
+        ("collective", "prefill"): "head-shard KV, pin chunk scan",
+        ("collective", "decode"): "shard_map flash-decode",
+        ("memory", "train"): "remat policy: save matmul outputs",
+        ("memory", "prefill"): "fuse attention chunks (Pallas on TPU)",
+        ("memory", "decode"): "at HBM floor (cache streaming)",
+        ("compute", "train"): "near roofline — tune MXU tile via Vortex",
+        ("compute", "prefill"): "near roofline",
+        ("compute", "decode"): "near roofline",
+    }
+    for key in sorted(results):
+        v = results[key]
+        if v.get("mesh") != "pod16x16":
+            continue
+        if "skipped" in v:
+            rows.append(
+                f"| {v['arch']} | {v['shape']} | — | — | — | — | — | — | "
+                f"skipped: sub-quadratic rule |"
+            )
+            continue
+        if "roofline" not in v:
+            continue
+        r = v["roofline"]
+        kind = (
+            "train" if v["shape"].startswith("train")
+            else "prefill" if "prefill" in v["shape"] else "decode"
+        )
+        act = actions.get((r["dominant"], kind), "")
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | **{r['dominant']}** | "
+            f"{r['compute_s']:.4g} | {r['memory_s']:.4g} | "
+            f"{r['collective_s']:.4g} | {r['useful_ratio']:.3f} | "
+            f"{v['state_gib_per_device']:.2f} | {act} |"
+        )
+    return head + "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_final.json"
+    with open(path) as f:
+        results = json.load(f)
+    md = table(results)
+    if "--write" in sys.argv:
+        with open("EXPERIMENTS.md") as f:
+            doc = f.read()
+        marker = "<!-- ROOFLINE_TABLE -->"
+        assert marker in doc
+        doc = doc.replace(marker, marker + "\n\n" + md)
+        with open("EXPERIMENTS.md", "w") as f:
+            f.write(doc)
+        print("EXPERIMENTS.md updated")
+    else:
+        print(md)
+
+
+if __name__ == "__main__":
+    main()
