@@ -1,0 +1,104 @@
+"""Workload-generic engine benchmark: select overhead + cache behaviour.
+
+The paper's runtime claim (Fig. 14) is that sample-free selection stays in
+the microseconds regime and the executable cache stays bounded by the
+lattice, not by the number of distinct runtime shapes.  This benchmark
+drives GEMM, flash attention and Conv2D through ONE VortexEngine and
+reports, per workload kind:
+
+  * mean selection overhead (us) for uncached shapes,
+  * selection-cache hit rate over a repeated dynamic stream,
+  * executable-cache entries vs calls served (bucket amortization),
+  * steady-state wall-clock per call.
+
+    PYTHONPATH=src python benchmarks/bench_workloads.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VortexEngine
+from benchmarks.util import emit
+
+# Dynamic streams: every shape appears twice (second pass measures cache
+# behaviour), sizes deliberately prime/non-tile-aligned.
+GEMM_MS = [5, 33, 63, 128, 200, 381]
+ATTN_SEQS = [31, 67, 127, 199, 257]
+CONV_BATCHES = [1, 2, 3, 5]
+
+
+def _bench(name: str, calls) -> float:
+    t0 = time.perf_counter()
+    for fn in calls:
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / len(calls)
+
+
+def main() -> None:
+    eng = VortexEngine("host_cpu")
+    rng = np.random.default_rng(0)
+
+    # --- gemm ----------------------------------------------------------
+    N, K = 768, 768
+    b = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    mats = {
+        m: jnp.asarray(rng.normal(size=(m, K)), jnp.float32) for m in GEMM_MS
+    }
+    gemm_calls = [
+        (lambda a=mats[m]: eng.gemm(a, b)) for m in GEMM_MS * 2
+    ]
+    gemm_us = _bench("gemm", gemm_calls) * 1e6
+
+    # --- attention -----------------------------------------------------
+    qkv = {}
+    for s in ATTN_SEQS:
+        qkv[s] = (
+            jnp.asarray(rng.normal(size=(1, 8, s, 64)), jnp.float32),
+            jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32),
+            jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32),
+        )
+    attn_calls = [
+        (lambda t=qkv[s]: eng.attention(*t)) for s in ATTN_SEQS * 2
+    ]
+    attn_us = _bench("attention", attn_calls) * 1e6
+
+    # --- conv2d --------------------------------------------------------
+    wconv = jnp.asarray(rng.normal(size=(3, 3, 16, 32)), jnp.float32)
+    xs = {
+        bs: jnp.asarray(rng.normal(size=(bs, 28, 28, 16)), jnp.float32)
+        for bs in CONV_BATCHES
+    }
+    conv_calls = [
+        (lambda x=xs[bs]: eng.conv2d(x, wconv)) for bs in CONV_BATCHES * 2
+    ]
+    conv_us = _bench("conv2d", conv_calls) * 1e6
+
+    # --- report --------------------------------------------------------
+    wall = {"gemm": gemm_us, "attention": attn_us, "conv2d": conv_us}
+    for kind, s in eng.stats().items():
+        selects = s["selects"]
+        hits = s["select_cache_hits"]
+        misses = max(selects - hits, 1)
+        emit(
+            f"workloads/{kind}", wall[kind],
+            f"select_us={s['select_us_sum'] / misses:.1f};"
+            f"select_hit_rate={hits / max(selects, 1):.2f};"
+            f"exec_entries={s['exec_entries']};"
+            f"exec_hits={s['exec_hits']};"
+            f"compile_s={s['compile_seconds']:.2f}",
+        )
+    total_exec = sum(s["exec_entries"] for s in eng.stats().values())
+    total_calls = sum(s["exec_hits"] for s in eng.stats().values())
+    emit(
+        "workloads/summary", 0.0,
+        f"executables={total_exec};calls_served={total_calls};"
+        f"amortization={total_calls / max(total_exec, 1):.1f}x",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Each prints ``name,us_per_call,derived`` CSV lines (benchmarks/util.emit).
   bench_analyzer         Table 7            hybrid analyzer configs
   bench_adaptive         Fig. 16            MXU/VPU adaptation
   bench_runtime_overhead Fig. 14            selection overhead
+  bench_workloads        §4 generality      gemm/attention/conv one engine
 """
 from __future__ import annotations
 
@@ -24,6 +25,7 @@ MODULES = [
     "bench_adaptive",
     "bench_analyzer",
     "bench_gemm",
+    "bench_workloads",
     "bench_offsample",
     "bench_hierarchy",
     "bench_models",

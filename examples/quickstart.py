@@ -1,4 +1,4 @@
-"""Quickstart: the Vortex sample-free workflow on one dynamic-shape GEMM.
+"""Quickstart: the Vortex sample-free workflow across workloads.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -7,7 +7,9 @@ Walks the paper's pipeline end to end:
   2. offline  — hybrid analyzer scores the lattice,
   3. runtime  — per-shape strategy selection + bucketed execution,
 and prints what the paper's figures report: candidate counts, offline
-seconds, selection overhead, padding waste.
+seconds, selection overhead, padding waste.  GEMM, flash attention and
+Conv2D all route through the SAME engine — one workload registry, one
+scored-lattice cache, one bucketed executable cache (DESIGN.md §3).
 """
 import time
 
@@ -15,12 +17,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    AttentionWorkload,
     GemmWorkload,
-    HOST_CPU,
     TPU_V5E,
-    VortexGemm,
+    VortexEngine,
 )
 from repro.core.candidates import generate_lattice
+from repro.kernels.ref import ref_attention, ref_conv2d
 
 
 def main() -> None:
@@ -33,21 +36,27 @@ def main() -> None:
     print(f" level-1 (VMEM tile) candidates: {len(lat.l1)}")
     print(f" total (paper reports 392 for the tensor-core space): "
           f"{lat.num_candidates()}")
+    alat = generate_lattice(
+        TPU_V5E, AttentionWorkload(seq=None, head_dim=64), "mxu"
+    )
+    print(f" attention (seq-dynamic) lattice: {alat.num_candidates()} "
+          f"candidates through the same Algorithm 2")
 
-    print("\n== offline: build the full engine on the host CPU ==")
+    print("\n== offline: build the engine on the host CPU ==")
     t0 = time.perf_counter()
-    eng = VortexGemm(HOST_CPU, wl)
+    eng = VortexEngine("host_cpu")
+    gemm = eng.gemm_for(wl.N, wl.K)
     print(f" offline stage: {time.perf_counter() - t0:.2f}s "
-          f"({eng.offline_stats.num_measured} tiles profiled; "
+          f"({gemm.offline_stats.num_measured} tiles profiled; "
           f"sample-driven tuning would need hours)")
 
-    print("\n== runtime: dynamic shapes, sample-free ==")
+    print("\n== runtime: dynamic GEMM shapes, sample-free ==")
     rng = np.random.default_rng(0)
     b = jnp.asarray(rng.normal(size=(wl.K, wl.N)), jnp.float32)
     for m in (5, 62, 128, 200, 381):
         a = jnp.asarray(rng.normal(size=(m, wl.K)), jnp.float32)
-        sel = eng.select(m)
-        out = eng(a, b)
+        sel = gemm.select(m)
+        out = eng.gemm(a, b)
         ref = np.asarray(a) @ np.asarray(b)
         err = float(np.max(np.abs(np.asarray(out) - ref)))
         print(
@@ -55,8 +64,33 @@ def main() -> None:
             f"(tile {sel.strategy.l1}, backend {sel.backend}, "
             f"select {sel.select_seconds * 1e6:.0f}us, max|err|={err:.1e})"
         )
-    print(f"\n executable cache entries: {eng.cache_info['entries']} "
-          f"(bounded by the lattice, not by #distinct shapes)")
+
+    print("\n== runtime: attention + conv through the same engine ==")
+    for s in (33, 67, 127):
+        q = jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
+        out = eng.attention(q, k, v)
+        err = float(np.max(np.abs(
+            np.asarray(out) - np.asarray(ref_attention(q, k, v, causal=True))
+        )))
+        print(f" attention seq={s:4d} -> max|err|={err:.1e}")
+    for bsz in (1, 3):
+        x = jnp.asarray(rng.normal(size=(bsz, 14, 14, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(3, 3, 8, 16)), jnp.float32)
+        out = eng.conv2d(x, w)
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(
+            ref_conv2d(x, w, stride=1, padding="VALID")
+        ))))
+        print(f" conv2d batch={bsz} -> max|err|={err:.1e}")
+
+    print("\n== engine stats (one cache hierarchy across workloads) ==")
+    for kind, s in eng.stats().items():
+        print(
+            f" {kind:9s}: {s['signatures']} signature(s), "
+            f"{s['selects']} selects ({s['select_cache_hits']} cached), "
+            f"{s['exec_entries']} executables for {s['exec_hits']} calls"
+        )
 
 
 if __name__ == "__main__":

@@ -21,12 +21,18 @@ from repro.core.cost_model import (
     gemm_runtime_costs,
     gemm_strategy_cost,
     l0_analytical_cost,
+    runtime_costs,
+    strategy_cost,
 )
-from repro.core.engine import OfflineStats, VortexEngine, VortexGemm
+from repro.core.engine import (
+    OfflineStats,
+    VortexEngine,
+    VortexGemm,
+    VortexKernel,
+)
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec, get_hardware
 from repro.core.rkernel import (
     AnalyzeType,
-    GemmWorkload,
     LayerMetaInfo,
     LoopType,
     RKernelProgram,
@@ -34,6 +40,15 @@ from repro.core.rkernel import (
     interpret_gemm,
     make_gemm_program,
 )
-from repro.core.selector import RuntimeSelector, Selection
+from repro.core.selector import RuntimeSelector, Selection, SelectorStats
+from repro.core.workloads import (
+    WORKLOADS,
+    AttentionWorkload,
+    Conv2dWorkload,
+    GemmWorkload,
+    Workload,
+    make_workload,
+    register_workload,
+)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -27,9 +27,10 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from repro.core.candidates import CandidateLattice, Tile
-from repro.core.cost_model import gemm_strategy_cost, l0_analytical_cost
+from repro.core.cost_model import l0_analytical_cost, strategy_cost
 from repro.core.hardware import HardwareSpec
-from repro.core.rkernel import AnalyzeType, GemmWorkload, Strategy
+from repro.core.rkernel import Strategy
+from repro.core.workloads import Workload
 
 __all__ = [
     "Profiler",
@@ -175,7 +176,7 @@ class HybridAnalyzer:
     def __init__(
         self,
         hw: HardwareSpec,
-        wl: GemmWorkload,
+        wl: Workload,
         profiler: Profiler | None = None,
         empirical_levels: Sequence[int] = (0,),
     ):
@@ -211,11 +212,12 @@ class HybridAnalyzer:
                 strat = Strategy(tiles=(child, l1), backend=backend)
                 # Cost of ONE layer-1 tile: evaluate the recursion at a shape
                 # equal to the tile itself (grid = 1x1x1).
-                bd = gemm_strategy_cost(
+                bd = strategy_cost(
                     self._hw,
-                    dataclasses.replace(self._wl, M=l1[0], N=l1[1], K=l1[2]),
+                    self._wl,
                     strat,
                     cost_l0=l0_cost_cache[child],
+                    dims=(int(l1[0]), int(l1[1]), int(l1[2])),
                 )
                 if bd.l1_per_tile < best_c:
                     best_c, best_child = bd.l1_per_tile, child

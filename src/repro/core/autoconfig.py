@@ -20,7 +20,7 @@ import math
 
 from repro.core.hardware import TPU_V5E, HardwareSpec
 from repro.core.candidates import generate_lattice
-from repro.core.rkernel import GemmWorkload
+from repro.core.workloads import GemmWorkload
 
 __all__ = ["select_attn_chunk", "select_microbatches"]
 

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.candidates import generate_lattice
 from repro.core.hardware import HardwareSpec
-from repro.core.rkernel import GemmWorkload
+from repro.core.workloads import GemmWorkload
 
 __all__ = ["SampleDrivenCompiler", "VendorBaseline"]
 

@@ -3,7 +3,8 @@
 For each rKernel layer, from the innermost out:
 
   1. ``init_cands``        — seed the candidate range from that layer's
-     hardware resource limits (paper ``InitCands``/``GetHardwareInfo``).
+     hardware resource limits (paper ``InitCands``/``GetHardwareInfo``) and
+     the *workload's* per-tile footprint model (workloads.py).
   2. ``filter_by_isa``     — at layer 0, keep only tiles compatible with the
      ISA granularity (MMA/AVX512 in the paper; MXU/VREG tiling here).
   3. ``filter_by_multiples`` — keep only tiles that are elementwise integer
@@ -11,8 +12,10 @@ For each rKernel layer, from the innermost out:
      record the child map.  This confines padding loss to the outermost
      runtime level (paper Fig. 8).
 
-The output is a :class:`CandidateLattice`: per-layer candidate lists plus the
-parent→children map that the analyzer (analyzer.py) scores.
+The generator is workload-generic: every capacity check routes through the
+:class:`~repro.core.workloads.Workload` protocol, so attention and conv reuse
+Algorithm 2 unchanged.  The output is a :class:`CandidateLattice`: per-layer
+candidate lists plus the parent→children map the analyzer scores.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import itertools
 from typing import Mapping, Sequence
 
 from repro.core.hardware import HardwareLevel, HardwareSpec
-from repro.core.rkernel import GemmWorkload
+from repro.core.workloads import Workload
 
 __all__ = [
     "Tile",
@@ -68,55 +71,44 @@ def _pow2_range(lo: int, hi: int) -> list[int]:
     return out
 
 
-def _gemm_tile_vmem_bytes(tile: Tile, wl: GemmWorkload) -> int:
-    """VMEM working set of one layer-1 GEMM tile.
-
-    A(m,k) + B(k,n) streamed with double buffering, plus the f32 accumulator
-    C(m,n) resident across the k loop.
-    """
-    m, n, k = tile
-    stream = 2 * (m * k + k * n) * wl.dtype_bytes
-    acc = m * n * wl.acc_bytes
-    return stream + acc
-
-
 def init_cands(
-    level: HardwareLevel, wl: GemmWorkload, backend_tile: Tile
+    level: HardwareLevel, wl: Workload, backend_tile: Tile
 ) -> list[Tile]:
     """Seed candidates for one layer from hardware limits (``InitCands``).
 
     The enumeration is powers-of-two multiples of the backend's native tile,
-    bounded above by the layer's storage capacity — exactly the paper's
-    "deduce a feasible range for candidate shapes based on hardware
-    utilization metrics" step.  Power-of-two steps keep the multiples sieve
-    dense without exploding the space (the paper reports 392 candidates for
-    the tensor-core GEMM space; ours is the same order of magnitude).
+    bounded above by the layer's storage capacity against the workload's
+    footprint model — exactly the paper's "deduce a feasible range for
+    candidate shapes based on hardware utilization metrics" step.
+    Power-of-two steps keep the multiples sieve dense without exploding the
+    space (the paper reports 392 candidates for the tensor-core GEMM space;
+    ours is the same order of magnitude).
     """
     bm, bn, bk = backend_tile
     if level.depth == 0:
         # Level-0 range: from 1x the native tile up to the register-file
         # capacity (operand fragments must fit the VREG file).
-        ms = _pow2_range(bm, bm * 16)
-        ns = _pow2_range(bn, bn * 4)
-        ks = _pow2_range(bk, bk * 4)
+        mm, mn, mk = wl.l0_axis_multipliers()
+        ms = _pow2_range(bm, bm * mm)
+        ns = _pow2_range(bn, bn * mn)
+        ks = _pow2_range(bk, bk * mk)
         cap = level.capacity_bytes
         out = []
         for t in itertools.product(ms, ns, ks):
-            m, n, k = t
-            frag = (m * k + k * n) * wl.dtype_bytes + m * n * wl.acc_bytes
-            if cap is None or frag <= cap * 16:
+            if cap is None or wl.l0_fragment_bytes(t) <= cap * 16:
                 # VREG fragments are pipelined; allow a 16x over-subscription
                 # factor (operands stream through, not resident all at once).
                 out.append(t)
         return out
     # Upper layers: bounded by this layer's memory capacity.
-    ms = _pow2_range(bm, 8192)
-    ns = _pow2_range(bn, 8192)
-    ks = _pow2_range(bk, 8192)
+    cm, cn, ck = wl.l1_axis_caps(backend_tile)
+    ms = _pow2_range(bm, max(cm, bm))
+    ns = _pow2_range(bn, max(cn, bn))
+    ks = _pow2_range(bk, max(ck, bk))
     out = []
     for t in itertools.product(ms, ns, ks):
         if level.capacity_bytes is None or (
-            _gemm_tile_vmem_bytes(t, wl) <= level.capacity_bytes
+            wl.l1_tile_bytes(t) <= level.capacity_bytes
         ):
             out.append(t)
     return out
@@ -162,7 +154,7 @@ def filter_by_multiples(
 
 
 def generate_lattice(
-    hw: HardwareSpec, wl: GemmWorkload, backend: str | None = None
+    hw: HardwareSpec, wl: Workload, backend: str | None = None
 ) -> CandidateLattice:
     """Run Algorithm 2 bottom-up across all strategy layers.
 

@@ -1,4 +1,4 @@
-"""Analytical cost model (paper §5.2, Eqs. 2-4).
+"""Analytical cost model (paper §5.2, Eqs. 2-4), workload-generic.
 
 The model is recursive over rKernel layers.  At layer L, with a serial
 (temporal) loop of ``n`` iterations whose body is the layer-(L-1) kernel:
@@ -17,6 +17,12 @@ Level-0 cost comes from the analyzer (empirical where available, else the
 native-tile analytical estimate here), so this module exposes the recursion
 with an injectable ``cost_l0`` — the hybrid split of §5.2.
 
+The recursion itself is workload-agnostic: concrete (M, N, K) dims come from
+``wl.runtime_dims`` and grid-level traffic from ``wl.tile_traffic_bytes``
+(workloads.py), so GEMM, attention and conv all evaluate through the same
+Eq. 2-4 arithmetic.  ``gemm_strategy_cost``/``gemm_runtime_costs`` remain as
+aliases of the generic entry points.
+
 All costs are seconds.  A vectorized (numpy) evaluator over many layer-1
 candidates is provided for the runtime selector, whose overhead must stay
 negligible (paper Fig. 14).
@@ -29,11 +35,14 @@ import math
 import numpy as np
 
 from repro.core.hardware import HardwareSpec
-from repro.core.rkernel import GemmWorkload, Strategy
+from repro.core.rkernel import Strategy
+from repro.core.workloads import Workload
 
 __all__ = [
     "CostBreakdown",
     "l0_analytical_cost",
+    "strategy_cost",
+    "runtime_costs",
     "gemm_strategy_cost",
     "gemm_runtime_costs",
 ]
@@ -82,23 +91,24 @@ def _t_temporal(
     return t_load + (n_iter - 1.0) * max(t_load, body) + body + t_store
 
 
-def gemm_strategy_cost(
+def strategy_cost(
     hw: HardwareSpec,
-    wl: GemmWorkload,
+    wl: Workload,
     strategy: Strategy,
     m_runtime: int | None = None,
     cost_l0: float | None = None,
     num_cores: int = 1,
+    dims: tuple[int, int, int] | None = None,
 ) -> CostBreakdown:
-    """Full Eq. 2-4 recursion for a GEMM strategy at a concrete shape.
+    """Full Eq. 2-4 recursion for a strategy at a concrete shape.
 
     ``cost_l0`` overrides the analytical level-0 estimate with an empirical
     measurement (the hybrid analyzer passes it in).  ``num_cores`` is the
-    level-2 |HardwareUnit| — TensorCores across the shard this GEMM runs on.
+    level-2 |HardwareUnit| — TensorCores across the shard this runs on.
+    ``dims`` overrides the workload's runtime (M, N, K) view entirely — the
+    analyzer uses it to cost ONE layer-1 tile (grid = 1x1x1).
     """
-    M = wl.M if m_runtime is None else m_runtime
-    assert M is not None, "runtime M required for dynamic workloads"
-    N, K = wl.N, wl.K
+    M, N, K = dims if dims is not None else wl.runtime_dims(m_runtime)
     m0, n0, k0 = strategy.l0
     m1, n1, k1 = strategy.l1
 
@@ -118,15 +128,16 @@ def gemm_strategy_cost(
 
     # ---- layer 2: grid. Parallel loops over ceil(M/m1) * ceil(N/n1)
     # instances on num_cores cores; temporal reduction over ceil(K/k1)
-    # steps, each streaming an (m1,k1)+(k1,n1) pair from HBM.
+    # steps, each streaming the workload's per-tile operands from HBM.
     gm, gn, gk = (
         math.ceil(M / m1),
         math.ceil(N / n1),
         math.ceil(K / k1),
     )
     hbm_bw = hw.level(1).load_bandwidth
-    t_load1 = (m1 * k1 + k1 * n1) * wl.dtype_bytes / hbm_bw
-    t_store1 = m1 * n1 * wl.dtype_bytes / hbm_bw
+    load_bytes, store_bytes = wl.tile_traffic_bytes(m1, n1, k1)
+    t_load1 = load_bytes / hbm_bw
+    t_store1 = store_bytes / hbm_bw
     t_tile = _t_temporal(t_load1, gk, cost_l1_tile, t_store1)
     f_parallel = math.ceil(gm * gn / max(num_cores, 1))  # Eq. 3
     total = f_parallel * t_tile  # Eq. 4
@@ -144,9 +155,9 @@ def gemm_strategy_cost(
     )
 
 
-def gemm_runtime_costs(
+def runtime_costs(
     hw: HardwareSpec,
-    wl: GemmWorkload,
+    wl: Workload,
     l1_tiles: np.ndarray,
     l1_costs: np.ndarray,
     m_runtime: int,
@@ -159,18 +170,24 @@ def gemm_runtime_costs(
     arithmetic at the grid level runs, keeping selection overhead at the
     microsecond scale that Fig. 14 demands).
     """
-    N, K = wl.N, wl.K
+    M, N, K = wl.runtime_dims(m_runtime)
     m1 = l1_tiles[:, 0].astype(np.float64)
     n1 = l1_tiles[:, 1].astype(np.float64)
     k1 = l1_tiles[:, 2].astype(np.float64)
-    gm = np.ceil(m_runtime / m1)
+    gm = np.ceil(M / m1)
     gn = np.ceil(N / n1)
     gk = np.ceil(K / k1)
     hbm_bw = hw.level(1).load_bandwidth
-    t_load = (m1 * k1 + k1 * n1) * wl.dtype_bytes / hbm_bw
-    t_store = m1 * n1 * wl.dtype_bytes / hbm_bw
+    load_bytes, store_bytes = wl.tile_traffic_bytes(m1, n1, k1)
+    t_load = load_bytes / hbm_bw
+    t_store = store_bytes / hbm_bw
     body = l1_costs
     t_tile = t_load + np.maximum(gk - 1.0, 0.0) * np.maximum(t_load, body) \
         + body + t_store
     f_parallel = np.ceil(gm * gn / max(num_cores, 1))
     return f_parallel * t_tile
+
+
+# Back-compat aliases (the pre-generic names; same call signatures).
+gemm_strategy_cost = strategy_cost
+gemm_runtime_costs = runtime_costs

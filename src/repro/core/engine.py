@@ -1,7 +1,8 @@
 """VortexEngine: the end-to-end sample-free compiler (paper Fig. 6).
 
 Offline stage (no shape samples anywhere):
-  1. top-down: describe the workload as an rKernel program (rkernel.py),
+  1. top-down: describe the workload as an rKernel program (workloads.py
+     declares it; rkernel.py holds the layer metadata),
   2. bottom-up: generate the hardware-pruned candidate lattice per backend
      (candidates.py, Algorithm 2),
   3. score it with the hybrid analyzer (analyzer.py).
@@ -11,22 +12,27 @@ Runtime stage:
      (selector.py) via the analytical model only,
   5. construct/fetch the executable for the induced bucket and run.
 
+The engine is workload-generic: :class:`VortexKernel` drives ANY registered
+:class:`~repro.core.workloads.Workload` through the same lattice → analyzer →
+selector → bucketed-executable pipeline, and :class:`VortexEngine` serves
+``gemm``, ``attention`` and ``conv2d`` entry points from one workload
+registry, one scored-lattice cache and one bucketed executable cache per
+signature.
+
 Execution backends:
-  * ``xla``    — lax.dot_general on the bucket shape (host-CPU execution in
+  * ``xla``    — flat JAX ops on the bucket shape (host-CPU execution in
                  this container; what the benchmarks time),
-  * ``pallas`` — the Vortex-tiled Pallas TPU kernel (kernels/gemm.py) with
-                 BlockSpecs taken from the selected strategy; runs in
-                 interpret mode off-TPU and compiles natively on TPU.
+  * ``pallas`` — the Vortex-tiled Pallas TPU kernels (kernels/) with
+                 BlockSpecs taken from the selected strategy; run in
+                 interpret mode off-TPU and compile natively on TPU.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Mapping
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.analyzer import (
     HybridAnalyzer,
@@ -37,10 +43,15 @@ from repro.core.analyzer import (
 )
 from repro.core.candidates import generate_lattice
 from repro.core.hardware import HardwareSpec, get_hardware
-from repro.core.rkernel import GemmWorkload, Strategy, make_gemm_program
 from repro.core.selector import RuntimeSelector, Selection
+from repro.core.workloads import (
+    AttentionWorkload,
+    Conv2dWorkload,
+    GemmWorkload,
+    Workload,
+)
 
-__all__ = ["OfflineStats", "VortexGemm", "VortexEngine"]
+__all__ = ["OfflineStats", "VortexKernel", "VortexGemm", "VortexEngine"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,23 +71,28 @@ class _CacheEntry:
     hits: int = 0
 
 
-class VortexGemm:
-    """One dynamic-shape GEMM workload, compiled sample-free.
+class VortexKernel:
+    """One dynamic-shape workload, compiled sample-free.
 
-    N and K are static (weights side); M is dynamic.  This is the unit the
-    paper evaluates (BERT GEMMs with M = batch*seq).
+    Generic over the Workload protocol: the workload declares its lattice
+    footprints, its runtime-dims view and its executable builder; this class
+    owns the offline build (lattice + scoring, optionally shared through
+    ``scored_cache``), the runtime selector and the bucketed executable
+    cache.  This is the unit the paper evaluates (BERT GEMMs with
+    M = batch*seq; attention/conv ride the same machinery).
     """
 
     def __init__(
         self,
         hw: HardwareSpec,
-        wl: GemmWorkload,
+        wl: Workload,
         profiler: Profiler | None = None,
         empirical_levels: tuple[int, ...] = (0,),
         backends: tuple[str, ...] | None = None,
         num_cores: int = 1,
         impl: str = "xla",
         interpret: bool = True,
+        scored_cache: dict | None = None,
     ):
         self._hw = hw
         self._wl = wl
@@ -88,6 +104,12 @@ class VortexGemm:
         n_cands = 0
         n_meas = 0
         for backend in backends:
+            cache_key = (wl.lattice_key, hw.name, backend, empirical_levels)
+            hit = scored_cache.get(cache_key) if scored_cache is not None \
+                else None
+            if hit is not None:
+                scored[backend] = hit
+                continue
             lattice = generate_lattice(hw, wl, backend)
             n_cands += lattice.num_candidates()
             analyzer = HybridAnalyzer(
@@ -96,6 +118,8 @@ class VortexGemm:
             sl = analyzer.score(lattice)
             n_meas += sl.num_measured
             scored[backend] = sl
+            if scored_cache is not None:
+                scored_cache[cache_key] = sl
         self.selector = RuntimeSelector(hw, wl, scored, num_cores=num_cores)
         self.offline_stats = OfflineStats(
             num_candidates=n_cands,
@@ -105,42 +129,30 @@ class VortexGemm:
         )
         self._exec_cache: dict[tuple, _CacheEntry] = {}
 
+    @property
+    def workload(self) -> Workload:
+        return self._wl
+
     # -- executable construction ------------------------------------------
 
-    def _build_executable(self, sel: Selection) -> _CacheEntry:
-        mp = sel.padded_m
-        N, K = self._wl.N, self._wl.K
-        if self._impl == "pallas":
-            from repro.kernels import gemm as gemm_kernel
-
-            m1, n1, k1 = sel.strategy.l1
-
-            def fn(a, b):
-                return gemm_kernel.vortex_gemm(
-                    a, b, block_m=m1, block_n=min(n1, N), block_k=min(k1, K),
-                    interpret=self._interpret,
-                )
-
-        else:
-
-            def fn(a, b):
-                return jax.lax.dot_general(
-                    a, b, (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32,
-                ).astype(a.dtype)
-
+    def _build_executable(self, sel: Selection, args: tuple) -> _CacheEntry:
+        fn = self._wl.build_executable(
+            sel, impl=self._impl, interpret=self._interpret
+        )
         jfn = jax.jit(fn)
         t0 = time.perf_counter()
-        a = jnp.zeros((mp, K), jnp.float32)
-        b = jnp.zeros((K, N), jnp.float32)
-        jfn(a, b).block_until_ready()
+        warm = self._wl.example_args(sel, *args)
+        jax.block_until_ready(jfn(*warm))
         return _CacheEntry(fn=jfn, compile_seconds=time.perf_counter() - t0)
 
-    def _entry_for(self, sel: Selection) -> _CacheEntry:
-        key = (sel.padded_m, sel.strategy.l1, sel.backend, self._impl)
+    def _entry_for(self, sel: Selection, args: tuple = ()) -> _CacheEntry:
+        key = (
+            sel.bucket, sel.strategy.l1, sel.backend, self._impl,
+            self._wl.exec_key(*args) if args else (),
+        )
         entry = self._exec_cache.get(key)
         if entry is None:
-            entry = self._build_executable(sel)
+            entry = self._build_executable(sel, args)
             self._exec_cache[key] = entry
         entry.hits += 1
         return entry
@@ -150,40 +162,69 @@ class VortexGemm:
     def select(self, m: int) -> Selection:
         return self.selector.select(m)
 
-    def precompile(self, m_max: int) -> int:
+    def precompile(self, m_max: int, *args) -> int:
         """Precompile every bucket reachable for M <= m_max (sample-free:
-        the bucket set comes from the lattice, not from shape samples)."""
+        the bucket set comes from the lattice, not from shape samples).
+
+        Workloads whose executables specialize on outer dims beyond the
+        bucket (``exec_key``, e.g. attention's batch/head counts) need
+        representative call ``args`` — otherwise the warmed entries sit
+        under a key real calls never hit.  Only the args' shapes matter.
+        """
         n = 0
-        for m in self.selector.buckets_upto(m_max):
-            self._entry_for(self.selector.select(m))
+        for sel in self.selector.selections_upto(m_max):
+            self._entry_for(sel, args)
             n += 1
         return n
 
-    def __call__(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        """Dynamic-shape matmul: pad M to the selected bucket, run, slice."""
-        m = a.shape[0]
+    def __call__(self, *args) -> jax.Array:
+        """Dynamic-shape dispatch: select on the runtime extent, pad to the
+        induced bucket, run the cached executable, undo the padding."""
+        m = self._wl.dynamic_extent(*args)
         sel = self.select(m)
-        entry = self._entry_for(sel)
-        if sel.padded_m != m:
-            a = jnp.pad(a, ((0, sel.padded_m - m), (0, 0)))
-        out = entry.fn(a, b)
-        return out[:m] if sel.padded_m != m else out
+        entry = self._entry_for(sel, args)
+        out = entry.fn(*self._wl.prepare(sel, *args))
+        return self._wl.finalize(sel, out, *args)
 
     @property
     def cache_info(self) -> dict:
         return {
             "entries": len(self._exec_cache),
             "hits": sum(e.hits for e in self._exec_cache.values()),
+            "compile_seconds": sum(
+                e.compile_seconds for e in self._exec_cache.values()
+            ),
+        }
+
+    @property
+    def select_stats(self) -> dict:
+        s = self.selector.stats
+        return {
+            "selects": s.selects,
+            "cache_hits": s.cache_hits,
+            "mean_select_us": s.mean_select_us,
         }
 
 
-class VortexEngine:
-    """Engine over many workloads: one VortexGemm per (N, K, dtype) signature.
+class VortexGemm(VortexKernel):
+    """One dynamic-shape GEMM workload, compiled sample-free.
 
-    Model layers request matmuls through :meth:`gemm`; signatures are built
-    lazily but *without* any dependence on the dynamic dim — first use of a
-    new (N, K) builds its lattice once, after which every runtime M is
-    served from the same scored lattice (sample-free across all M).
+    N and K are static (weights side); M is dynamic.  Kept as a named class
+    for the GEMM-only callers (serving, benchmarks); it is exactly
+    :class:`VortexKernel` over a :class:`GemmWorkload`.
+    """
+
+
+class VortexEngine:
+    """Engine over many workloads: one VortexKernel per workload signature.
+
+    Model layers request ops through :meth:`gemm` / :meth:`attention` /
+    :meth:`conv2d`; signatures are built lazily but *without* any dependence
+    on the dynamic dim — first use of a new signature builds its lattice
+    once, after which every runtime extent is served from the same scored
+    lattice (sample-free across all dynamic shapes).  Workloads whose
+    lattice inputs coincide (e.g. attention signatures differing only in
+    masking flags) share scored lattices through one engine-wide cache.
     """
 
     def __init__(
@@ -194,6 +235,7 @@ class VortexEngine:
         backends: tuple[str, ...] | None = None,
         impl: str = "xla",
         num_cores: int = 1,
+        interpret: bool = True,
     ):
         self._hw = get_hardware(hardware)
         if profiler is None:
@@ -209,13 +251,17 @@ class VortexEngine:
         self._backends = backends
         self._impl = impl
         self._num_cores = num_cores
-        self._gemms: dict[tuple[int, int], VortexGemm] = {}
+        self._interpret = interpret
+        self._kernels: dict[tuple, VortexKernel] = {}
+        self._scored_cache: dict[tuple, ScoredLattice] = {}
 
-    def gemm_for(self, n: int, k: int) -> VortexGemm:
-        key = (n, k)
-        if key not in self._gemms:
-            wl = GemmWorkload(M=None, N=n, K=k)
-            self._gemms[key] = VortexGemm(
+    # -- workload plumbing --------------------------------------------------
+
+    def kernel_for(self, wl: Workload) -> VortexKernel:
+        """The compiled kernel serving ``wl``'s signature (built lazily)."""
+        key = wl.signature
+        if key not in self._kernels:
+            self._kernels[key] = VortexKernel(
                 self._hw,
                 wl,
                 profiler=self._profiler,
@@ -223,17 +269,91 @@ class VortexEngine:
                 backends=self._backends,
                 num_cores=self._num_cores,
                 impl=self._impl,
+                interpret=self._interpret,
+                scored_cache=self._scored_cache,
             )
-        return self._gemms[key]
+        return self._kernels[key]
+
+    def gemm_for(self, n: int, k: int) -> VortexKernel:
+        return self.kernel_for(GemmWorkload(M=None, N=n, K=k))
+
+    # -- entry points -------------------------------------------------------
 
     def gemm(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """C[M,N] = A[M,K] @ B[K,N] with dynamic M."""
         return self.gemm_for(b.shape[1], b.shape[0])(a, b)
 
+    def attention(
+        self,
+        q: jax.Array,
+        k: jax.Array,
+        v: jax.Array,
+        *,
+        causal: bool = True,
+        window: int | None = None,
+        softcap: float | None = None,
+    ) -> jax.Array:
+        """Flash attention with dynamic sequence length.
+
+        q: (batch, q_heads, seq, head_dim); k, v: (batch, kv_heads, seq,
+        head_dim) with q_heads % kv_heads == 0 (GQA).  Requires causal=True
+        (padding correctness comes from the causal mask; see workloads.py).
+        """
+        wl = AttentionWorkload(
+            seq=None, head_dim=q.shape[-1], causal=causal, window=window,
+            softcap=softcap,
+        )
+        return self.kernel_for(wl)(q, k, v)
+
+    def conv2d(
+        self, x: jax.Array, w: jax.Array, *, stride: int = 1
+    ) -> jax.Array:
+        """Conv2D (VALID): x (b, h, w, cin); w (kh, kw, cin, cout)."""
+        kh, kw, cin, cout = w.shape
+        wl = Conv2dWorkload(
+            m=None, cin=cin, cout=cout, kh=kh, kw=kw, stride=stride
+        )
+        return self.kernel_for(wl)(x, w)
+
+    # -- introspection ------------------------------------------------------
+
+    def precompile(self, wl: Workload, m_max: int, *args) -> int:
+        """Precompile all buckets of ``wl`` reachable up to ``m_max``.
+        Pass representative call ``args`` for workloads with outer-dim
+        executable specialization (attention: any q/k/v with the serving
+        batch/head layout)."""
+        return self.kernel_for(wl).precompile(m_max, *args)
+
     def offline_stats(self) -> OfflineStats:
-        stats = [g.offline_stats for g in self._gemms.values()]
+        stats = [k.offline_stats for k in self._kernels.values()]
         return OfflineStats(
             num_candidates=sum(s.num_candidates for s in stats),
             num_measured=sum(s.num_measured for s in stats),
             build_seconds=sum(s.build_seconds for s in stats),
             backends=stats[0].backends if stats else (),
         )
+
+    def stats(self) -> dict[str, dict]:
+        """Per-workload-kind serving stats: selection overhead and executable
+        cache behaviour (what benchmarks/bench_workloads.py reports)."""
+        out: dict[str, dict] = {}
+        for kernel in self._kernels.values():
+            kind = kernel.workload.kind
+            agg = out.setdefault(
+                kind,
+                {
+                    "signatures": 0, "selects": 0, "select_cache_hits": 0,
+                    "select_us_sum": 0.0, "exec_entries": 0, "exec_hits": 0,
+                    "compile_seconds": 0.0,
+                },
+            )
+            sstats = kernel.selector.stats
+            cinfo = kernel.cache_info
+            agg["signatures"] += 1
+            agg["selects"] += sstats.selects
+            agg["select_cache_hits"] += sstats.cache_hits
+            agg["select_us_sum"] += sstats.select_seconds * 1e6
+            agg["exec_entries"] += cinfo["entries"]
+            agg["exec_hits"] += cinfo["hits"]
+            agg["compile_seconds"] += cinfo["compile_seconds"]
+        return out

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Mapping, Sequence
+from typing import Mapping
 
 import numpy as np
 
@@ -32,7 +32,7 @@ __all__ = [
     "LayerMetaInfo",
     "RKernelProgram",
     "Strategy",
-    "GemmWorkload",
+    "make_gemm_program",
     "interpret_gemm",
 ]
 
@@ -71,31 +71,6 @@ class LayerMetaInfo:
 
     def axes_of(self, kind: LoopType) -> tuple[str, ...]:
         return tuple(a for a, t in self.loop_type.items() if t is kind)
-
-
-@dataclasses.dataclass(frozen=True)
-class GemmWorkload:
-    """A (possibly dynamic) GEMM: C[M, N] = A[M, K] @ B[K, N].
-
-    ``dynamic_dims`` lists the dims unknown until runtime (for LM inference
-    that is M = batch*seq; N and K are weights-side and static).
-    """
-
-    M: int | None
-    N: int
-    K: int
-    dtype_bytes: int = 2
-    acc_bytes: int = 4
-    dynamic_dims: tuple[str, ...] = ("M",)
-
-    def flops(self, m: int | None = None) -> float:
-        m = self.M if m is None else m
-        assert m is not None
-        return 2.0 * m * self.N * self.K
-
-    @property
-    def axis_names(self) -> tuple[str, ...]:
-        return ("m", "n", "k")
 
 
 @dataclasses.dataclass(frozen=True)

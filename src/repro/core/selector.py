@@ -8,43 +8,62 @@ compute backends exist (MXU vs VPU here; Tensor vs CUDA core in the paper),
 the selector compares their best candidates and routes adaptively (Fig. 16).
 
 Selection is pure numpy over precomputed arrays: the overhead budget is the
-microseconds regime of the paper's Fig. 14.
+microseconds regime of the paper's Fig. 14.  The per-shape cache is
+LRU-bounded so long-running serving processes don't grow it without limit,
+and the sample-free precompilation set (``buckets_upto``) is derived from
+the lattice's distinct dynamic tile extents rather than by selecting every
+shape in range.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
-from typing import Mapping, Sequence
+from typing import Mapping
 
 import numpy as np
 
 from repro.core.analyzer import ScoredLattice
-from repro.core.cost_model import gemm_runtime_costs
+from repro.core.cost_model import runtime_costs
 from repro.core.hardware import HardwareSpec
-from repro.core.rkernel import GemmWorkload, Strategy
+from repro.core.rkernel import Strategy
+from repro.core.workloads import Workload
 
-__all__ = ["Selection", "RuntimeSelector"]
+__all__ = ["Selection", "RuntimeSelector", "SelectorStats"]
 
 
 @dataclasses.dataclass(frozen=True)
 class Selection:
-    """A constructed kernel for one runtime shape."""
+    """A constructed kernel for one runtime shape.
+
+    ``bucket`` is the executable-cache key shape: padding is confined to the
+    dynamic dims and only up to the lattice tile, while static dims keep
+    their TRUE extents (they are never padded at the bucket level) — the
+    sample-free bucketing induced by the candidate lattice (DESIGN.md §4).
+    """
 
     strategy: Strategy
     backend: str
     grid: tuple[int, int, int]            # (gm, gn, gk) launch geometry
-    padded_m: int                          # M rounded up to the l1 m-tile
+    padded_m: int                          # dynamic dim rounded to l1 m-tile
+    bucket: tuple[int, int, int]           # executable-cache key shape
     predicted_cost: float                  # seconds (analytical)
     select_seconds: float                  # runtime scheduling overhead
 
+
+@dataclasses.dataclass
+class SelectorStats:
+    """Runtime-overhead accounting for the serving path (Fig. 14)."""
+
+    selects: int = 0
+    cache_hits: int = 0
+    select_seconds: float = 0.0
+
     @property
-    def bucket(self) -> tuple[int, int, int]:
-        """The executable-cache key shape: padding is confined to M (the
-        dynamic dim) and only up to the lattice tile — the sample-free
-        bucketing induced by the candidate lattice (DESIGN.md §2)."""
-        m1, n1, k1 = self.strategy.l1
-        return (self.padded_m, self.grid[1] * n1, self.grid[2] * k1)
+    def mean_select_us(self) -> float:
+        misses = self.selects - self.cache_hits
+        return (self.select_seconds / misses * 1e6) if misses else 0.0
 
 
 class RuntimeSelector:
@@ -52,14 +71,16 @@ class RuntimeSelector:
 
     ``scored`` maps backend name -> ScoredLattice.  ``num_cores`` is the
     number of level-2 units the kernel may occupy (per-shard TensorCores).
+    ``cache_size`` bounds the per-shape LRU selection cache.
     """
 
     def __init__(
         self,
         hw: HardwareSpec,
-        wl: GemmWorkload,
+        wl: Workload,
         scored: Mapping[str, ScoredLattice],
         num_cores: int = 1,
+        cache_size: int = 4096,
     ):
         if not scored:
             raise ValueError("need at least one scored lattice")
@@ -67,16 +88,28 @@ class RuntimeSelector:
         self._wl = wl
         self._scored = dict(scored)
         self._num_cores = num_cores
-        self._cache: dict[int, Selection] = {}
+        self._cache: collections.OrderedDict[int, Selection] = (
+            collections.OrderedDict()
+        )
+        self._cache_size = cache_size
+        self.stats = SelectorStats()
+
+    @property
+    def workload(self) -> Workload:
+        return self._wl
 
     def select(self, m_runtime: int) -> Selection:
         """Pick the (backend, strategy) minimizing predicted cost at M."""
-        if m_runtime in self._cache:
-            return self._cache[m_runtime]
+        self.stats.selects += 1
+        cached = self._cache.get(m_runtime)
+        if cached is not None:
+            self._cache.move_to_end(m_runtime)
+            self.stats.cache_hits += 1
+            return cached
         t0 = time.perf_counter()
         best: tuple[float, str, int] | None = None
         for backend, sl in self._scored.items():
-            costs = gemm_runtime_costs(
+            costs = runtime_costs(
                 self._hw, self._wl, sl.l1_tiles, sl.l1_costs,
                 m_runtime, self._num_cores,
             )
@@ -89,27 +122,64 @@ class RuntimeSelector:
         sl = self._scored[backend]
         strategy = sl.strategy_for(idx)
         m1, n1, k1 = strategy.l1
+        M, N, K = self._wl.runtime_dims(m_runtime)
         grid = (
-            math.ceil(m_runtime / m1),
-            math.ceil(self._wl.N / n1),
-            math.ceil(self._wl.K / k1),
+            math.ceil(M / m1),
+            math.ceil(N / n1),
+            math.ceil(K / k1),
         )
+        dt = time.perf_counter() - t0
         sel = Selection(
             strategy=strategy,
             backend=backend,
             grid=grid,
             padded_m=grid[0] * m1,
+            bucket=self._wl.bucket_dims(grid, strategy.l1),
             predicted_cost=cost,
-            select_seconds=time.perf_counter() - t0,
+            select_seconds=dt,
         )
+        self.stats.select_seconds += dt
         self._cache[m_runtime] = sel
+        if len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
         return sel
+
+    def _dynamic_periods(self) -> set[int]:
+        """Distinct l1 extents along the workload's dynamic tile axes."""
+        periods: set[int] = set()
+        for sl in self._scored.values():
+            for axis in self._wl.dynamic_tile_axes:
+                periods.update(int(t) for t in sl.l1_tiles[:, axis])
+        return periods
+
+    def selections_upto(self, m_max: int) -> list[Selection]:
+        """One representative Selection per distinct outcome reachable for M
+        in [1, m_max] — the finite, sample-free precompilation set.
+
+        The vectorized cost of every candidate is piecewise constant in M:
+        it changes only where some ceil(M / t) ticks over, i.e. just past a
+        multiple of a dynamic tile extent ``t`` in the lattice.  So instead
+        of selecting all m_max shapes (O(m_max) selections), select only one
+        representative per constant interval — the interval's right endpoint
+        (multiples of the distinct tile extents, clipped at m_max) — and
+        dedupe by the executable-relevant identity (bucket + strategy +
+        backend).  Every runtime M <= m_max lands in some interval, whose
+        representative produced the identical selection.
+        """
+        points: set[int] = {m_max}
+        for t in self._dynamic_periods():
+            points.update(range(t, m_max + 1, t))
+        seen: set[tuple] = set()
+        out: list[Selection] = []
+        for p in sorted(points):
+            s = self.select(p)
+            key = (s.bucket, s.strategy.tiles, s.backend)
+            if key not in seen:
+                seen.add(key)
+                out.append(s)
+        return out
 
     def buckets_upto(self, m_max: int) -> list[int]:
         """All distinct padded-M buckets the selector can emit for M in
-        [1, m_max] — the finite, sample-free precompilation set for serving.
-        """
-        out = set()
-        for m in range(1, m_max + 1):
-            out.add(self.select(m).padded_m)
-        return sorted(out)
+        [1, m_max]."""
+        return sorted({s.padded_m for s in self.selections_upto(m_max)})

@@ -1,0 +1,620 @@
+"""Workload protocol + registry: the workload-generic face of the pipeline.
+
+The paper's central claim (§4) is that ONE hardware-hierarchized strategy
+space serves *all* dynamic-shape tensor programs.  This module is where a
+tensor program declares everything the pipeline needs to know about it:
+
+  * its axes and which of them are dynamic (unknown until runtime),
+  * its rKernel program (rkernel.py metadata, per hardware level),
+  * its per-tile footprint / FLOP / traffic model (consumed by the candidate
+    generator's ``InitCands`` capacity checks and by the Eq. 2-4 cost model),
+  * how a runtime shape maps onto the (m, n, k) contraction view, and
+  * a backend-kernel builder that turns a runtime :class:`Selection` into an
+    executable (XLA or Pallas).
+
+``generate_lattice`` (candidates.py), :class:`HybridAnalyzer` (analyzer.py),
+``runtime_costs`` (cost_model.py), :class:`RuntimeSelector` (selector.py) and
+the bucketed executable cache (engine.py) all operate on this protocol, so
+registering a new workload here is the ONLY step needed to route it through
+the sample-free pipeline end to end (DESIGN.md §3).
+
+Three workloads ship:
+
+  * :class:`GemmWorkload`      — C[M,N] = A[M,K] @ B[K,N], dynamic M,
+  * :class:`AttentionWorkload` — flash attention, dynamic sequence length
+    (both GEMMs of attention share the seq-tiled lattice: the l1 m-tile is
+    the query block, the l1 k-tile the key/value block),
+  * :class:`Conv2dWorkload`    — Conv2D through the im2col GEMM view,
+    dynamic batch/spatial (M = b*h'*w').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar, Mapping
+
+from repro.core.hardware import HardwareSpec
+from repro.core.rkernel import (
+    AnalyzeType,
+    LayerMetaInfo,
+    LoopType,
+    RKernelProgram,
+)
+
+__all__ = [
+    "Workload",
+    "GemmWorkload",
+    "AttentionWorkload",
+    "Conv2dWorkload",
+    "WORKLOADS",
+    "register_workload",
+    "make_workload",
+]
+
+Tile = tuple[int, int, int]
+
+# kind -> workload class; the single registry the engine serves from.
+WORKLOADS: dict[str, type["Workload"]] = {}
+
+
+def register_workload(cls: type["Workload"]) -> type["Workload"]:
+    """Class decorator: expose a workload to the engine by its ``kind``."""
+    if not cls.kind:
+        raise ValueError(f"{cls.__name__} must set a non-empty `kind`")
+    WORKLOADS[cls.kind] = cls
+    return cls
+
+
+def make_workload(kind: str, **kwargs: Any) -> "Workload":
+    try:
+        cls = WORKLOADS[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown workload {kind!r}; registered: {sorted(WORKLOADS)}"
+        ) from None
+    return cls(**kwargs)
+
+
+def _make_program(
+    hw: HardwareSpec, kind: str, funcs: Mapping[int, tuple[str, str, str]]
+) -> RKernelProgram:
+    """Shared rKernel skeleton (paper Fig. 10): PL loops at the top level,
+    TSL below, TRL on k everywhere; empirical analyzer only at level 0."""
+    layers = []
+    for depth in range(hw.num_levels):
+        load, store, compute = funcs.get(depth, ("", "", ""))
+        layers.append(
+            LayerMetaInfo(
+                layer_depth=depth,
+                loop_type={
+                    "m": LoopType.PARALLEL if depth == hw.num_levels - 1
+                    else LoopType.TEMPORAL_SPATIAL,
+                    "n": LoopType.PARALLEL if depth == hw.num_levels - 1
+                    else LoopType.TEMPORAL_SPATIAL,
+                    "k": LoopType.TEMPORAL_REDUCTION,
+                },
+                analyzer=AnalyzeType.EMPIRICAL if depth == 0
+                else AnalyzeType.ANALYTICAL,
+                load_func=load,
+                store_func=store,
+                compute_func=compute,
+            )
+        )
+    return RKernelProgram(kind=kind, layers=tuple(layers), hardware=hw.name)
+
+
+def _pal_blocks(l1: Tile, n: int, k: int) -> tuple[int, int, int, int, int]:
+    """Pallas block sizes + padded static dims for a GEMM-view executable.
+
+    The dynamic dim is already padded to the l1 m-tile by the engine; the
+    static N/K dims are padded *inside* the compiled executable (static pad
+    amounts, so the artifact stays shape-stable per bucket).
+    """
+    m1, n1, k1 = l1
+    bn = min(n1, n)
+    bk = min(k1, k)
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    return m1, bn, bk, np_, kp
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Protocol base.  A workload is viewed through its (m, n, k) contraction:
+    ``m`` is the (single) dynamic extent; ``n``/``k`` may be static (GEMM,
+    conv) or tied to the dynamic extent (attention's key length).
+
+    Subclasses override the hooks below; the defaults encode the plain-GEMM
+    behaviour so GEMM-like workloads (conv) stay thin.
+    """
+
+    kind: ClassVar[str] = ""
+    axis_names: ClassVar[tuple[str, ...]] = ("m", "n", "k")
+    # Which tile axes scale with the dynamic extent at runtime.  The selector
+    # uses this to enumerate grid breakpoints sample-free (buckets_upto).
+    dynamic_tile_axes: ClassVar[tuple[int, ...]] = (0,)
+
+    # ---- identity --------------------------------------------------------
+
+    @property
+    def signature(self) -> tuple:
+        """Engine-level cache key: one compiled VortexKernel per signature."""
+        return (self.kind,) + tuple(
+            getattr(self, f.name) for f in dataclasses.fields(self)
+        )
+
+    @property
+    def lattice_key(self) -> tuple:
+        """Scored-lattice cache key: the subset of the signature that the
+        candidate generator + analyzer actually depend on.  Workloads whose
+        runtime flags (masking etc.) don't change tile costs share scores."""
+        return self.signature
+
+    # ---- contraction view ------------------------------------------------
+
+    def runtime_dims(self, m_runtime: int | None = None) -> Tile:
+        """Map the dynamic extent to concrete (M, N, K)."""
+        raise NotImplementedError
+
+    def flops(self, m: int | None = None) -> float:
+        M, N, K = self.runtime_dims(m)
+        return 2.0 * M * N * K
+
+    # ---- capacity models (InitCands hardware limits) ---------------------
+
+    def l0_fragment_bytes(self, tile: Tile) -> int:
+        """Register-file bytes of one level-0 operand fragment."""
+        m, n, k = tile
+        return (m * k + k * n) * self.dtype_bytes + m * n * self.acc_bytes
+
+    def l1_tile_bytes(self, tile: Tile) -> int:
+        """VMEM working set of one layer-1 tile (double-buffered streams +
+        resident f32 accumulator)."""
+        m, n, k = tile
+        stream = 2 * (m * k + k * n) * self.dtype_bytes
+        acc = m * n * self.acc_bytes
+        return stream + acc
+
+    def l0_axis_multipliers(self) -> Tile:
+        """Upper pow2 multipliers over the native tile for level-0 ranges."""
+        return (16, 4, 4)
+
+    def l1_axis_caps(self, native: Tile) -> Tile:
+        """Absolute upper bounds for the level-1 pow2 ranges."""
+        return (8192, 8192, 8192)
+
+    # ---- Eq. 2 grid-level traffic (scalar or numpy arrays) ---------------
+
+    def tile_traffic_bytes(self, m1, n1, k1) -> tuple:
+        """(load, store) HBM bytes per layer-1 tile per reduction step."""
+        load = (m1 * k1 + k1 * n1) * self.dtype_bytes
+        store = m1 * n1 * self.dtype_bytes
+        return load, store
+
+    # ---- runtime geometry -------------------------------------------------
+
+    def bucket_dims(self, grid: Tile, l1: Tile) -> Tile:
+        """Executable-cache key shape.  Padding is confined to the dynamic
+        dims and only up to the lattice tile; static dims appear at their
+        TRUE size (the executable pads them internally if its blocks need
+        it) — the sample-free bucketing contract (DESIGN.md §4)."""
+        _, N, K = self.runtime_dims(1)
+        return (grid[0] * l1[0], N, K)
+
+    # ---- rKernel program --------------------------------------------------
+
+    def program(self, hw: HardwareSpec) -> RKernelProgram:
+        raise NotImplementedError
+
+    # ---- execution (engine hooks) -----------------------------------------
+    # ``sel`` below is a selector.Selection; jax is imported lazily so the
+    # analytical core stays importable without an accelerator stack.
+
+    def dynamic_extent(self, *args) -> int:
+        """The runtime value of the dynamic dim, from the call arguments."""
+        raise NotImplementedError
+
+    def exec_key(self, *args) -> tuple:
+        """Extra executable-cache key parts beyond the bucket (outer dims
+        that the compiled artifact is specialized on)."""
+        return ()
+
+    def prepare(self, sel, *args) -> tuple:
+        """Pad/reshape call args to the selected bucket."""
+        raise NotImplementedError
+
+    def finalize(self, sel, out, *args):
+        """Undo :meth:`prepare` on the executable's output."""
+        raise NotImplementedError
+
+    def build_executable(
+        self, sel, *, impl: str, interpret: bool
+    ) -> Callable:
+        """Build the bucket-shaped executable for a runtime selection."""
+        raise NotImplementedError
+
+    def example_args(self, sel, *args) -> tuple:
+        """Zero arrays of the executable's input shapes (jit warmup)."""
+        raise NotImplementedError
+
+    def reference(self, *args):
+        """Flat (non-hierarchized) JAX reference for correctness tests."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+@register_workload
+@dataclasses.dataclass(frozen=True)
+class GemmWorkload(Workload):
+    """A (possibly dynamic) GEMM: C[M, N] = A[M, K] @ B[K, N].
+
+    ``dynamic_dims`` lists the dims unknown until runtime (for LM inference
+    that is M = batch*seq; N and K are weights-side and static).
+    """
+
+    M: int | None
+    N: int
+    K: int
+    dtype_bytes: int = 2
+    acc_bytes: int = 4
+    dynamic_dims: tuple[str, ...] = ("M",)
+
+    kind: ClassVar[str] = "gemm"
+
+    def runtime_dims(self, m_runtime: int | None = None) -> Tile:
+        m = self.M if m_runtime is None else m_runtime
+        assert m is not None, "runtime M required for dynamic workloads"
+        return (m, self.N, self.K)
+
+    def flops(self, m: int | None = None) -> float:
+        m = self.M if m is None else m
+        assert m is not None
+        return 2.0 * m * self.N * self.K
+
+    def program(self, hw: HardwareSpec) -> RKernelProgram:
+        return _make_program(
+            hw,
+            self.kind,
+            {
+                0: ("load_tile_to_reg", "store_reg", "dot"),
+                1: ("copy_hbm_to_vmem", "copy_vmem_to_hbm", ""),
+            },
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def dynamic_extent(self, a, b) -> int:
+        return a.shape[0]
+
+    def prepare(self, sel, a, b) -> tuple:
+        import jax.numpy as jnp
+
+        mp = sel.padded_m
+        if mp != a.shape[0]:
+            a = jnp.pad(a, ((0, mp - a.shape[0]), (0, 0)))
+        return a, b
+
+    def finalize(self, sel, out, a, b):
+        m = a.shape[0]
+        return out[:m] if sel.padded_m != m else out
+
+    def build_executable(self, sel, *, impl: str, interpret: bool):
+        import jax
+        import jax.numpy as jnp
+
+        N, K = self.N, self.K
+        if impl == "pallas":
+            from repro.kernels.gemm import vortex_gemm
+
+            bm, bn, bk, np_, kp = _pal_blocks(sel.strategy.l1, N, K)
+
+            def fn(a, b):
+                if kp != K:
+                    a = jnp.pad(a, ((0, 0), (0, kp - K)))
+                    b = jnp.pad(b, ((0, kp - K), (0, 0)))
+                if np_ != N:
+                    b = jnp.pad(b, ((0, 0), (0, np_ - N)))
+                out = vortex_gemm(
+                    a, b, block_m=bm, block_n=bn, block_k=bk,
+                    interpret=interpret,
+                )
+                return out[:, :N] if np_ != N else out
+
+        else:
+
+            def fn(a, b):
+                return jax.lax.dot_general(
+                    a, b, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ).astype(a.dtype)
+
+        return fn
+
+    def example_args(self, sel, *args) -> tuple:
+        import jax.numpy as jnp
+
+        return (
+            jnp.zeros((sel.padded_m, self.K), jnp.float32),
+            jnp.zeros((self.K, self.N), jnp.float32),
+        )
+
+    def reference(self, a, b):
+        from repro.kernels.ref import ref_gemm
+
+        return ref_gemm(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@register_workload
+@dataclasses.dataclass(frozen=True)
+class AttentionWorkload(Workload):
+    """Flash attention with a dynamic sequence length.
+
+    Both contractions (QK^T: (sq,d)@(d,skv); PV: (sq,skv)@(skv,d)) tile on
+    the SAME sequence blocks, so one lattice governs both: the l1 m-tile is
+    the query block and the l1 k-tile the key/value block (the pairing the
+    Pallas kernel consumes as (block_q, block_k)).  The n axis is pinned to
+    the native lane tile — head_dim is static and fits one block — which
+    keeps the attention lattice free of meaningless n variation.
+
+    Padding correctness relies on the causal mask: padded key positions sit
+    above every true query position and are masked; padded query rows are
+    sliced off.  Hence ``causal=True`` is required (the dynamic-seq LM case
+    the paper targets).
+    """
+
+    seq: int | None
+    head_dim: int
+    causal: bool = True
+    window: int | None = None
+    softcap: float | None = None
+    dtype_bytes: int = 2
+    acc_bytes: int = 4
+    dynamic_dims: tuple[str, ...] = ("seq",)
+
+    kind: ClassVar[str] = "attention"
+    dynamic_tile_axes: ClassVar[tuple[int, ...]] = (0, 2)
+
+    def __post_init__(self) -> None:
+        if not self.causal:
+            raise NotImplementedError(
+                "engine-routed attention requires causal=True: zero-padded "
+                "key positions are only masked by the causal structure"
+            )
+
+    @property
+    def lattice_key(self) -> tuple:
+        # Masking flags don't move tile costs; share scored lattices.
+        return (self.kind, self.head_dim, self.dtype_bytes, self.acc_bytes)
+
+    def runtime_dims(self, m_runtime: int | None = None) -> Tile:
+        s = self.seq if m_runtime is None else m_runtime
+        assert s is not None, "runtime seq required"
+        return (s, self.head_dim, s)
+
+    def flops(self, m: int | None = None) -> float:
+        s = self.seq if m is None else m
+        assert s is not None
+        return 4.0 * s * s * self.head_dim  # QK^T + PV
+
+    def l1_tile_bytes(self, tile: Tile) -> int:
+        m1, _, k1 = tile
+        d = self.head_dim
+        stream = 2 * (m1 * d + 2 * k1 * d) * self.dtype_bytes  # Q + K,V
+        resident = m1 * d * self.acc_bytes + m1 * k1 * 4  # acc + f32 scores
+        return stream + resident
+
+    def l0_axis_multipliers(self) -> Tile:
+        return (16, 1, 4)  # n pinned to the native lane tile
+
+    def l1_axis_caps(self, native: Tile) -> Tile:
+        return (8192, native[1], 8192)
+
+    def tile_traffic_bytes(self, m1, n1, k1) -> tuple:
+        d = self.head_dim
+        load = 2 * k1 * d * self.dtype_bytes  # stream K and V blocks
+        store = m1 * d * self.dtype_bytes  # output block, once per tile
+        return load, store
+
+    def bucket_dims(self, grid: Tile, l1: Tile) -> Tile:
+        return (grid[0] * l1[0], self.head_dim, grid[2] * l1[2])
+
+    def program(self, hw: HardwareSpec) -> RKernelProgram:
+        return _make_program(
+            hw,
+            self.kind,
+            {
+                0: ("load_tile_to_reg", "store_reg", "dot"),
+                1: ("copy_qkv_to_vmem", "online_softmax_store", ""),
+            },
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def dynamic_extent(self, q, k, v) -> int:
+        assert q.shape[-2] == k.shape[-2], (
+            "engine attention is self-attention: query/key lengths must "
+            f"match, got {q.shape[-2]} vs {k.shape[-2]}"
+        )
+        return q.shape[-2]
+
+    def exec_key(self, q, k, v) -> tuple:
+        # Outer (batch, heads) dims specialize the compiled artifact.
+        return (q.shape[0], q.shape[1], k.shape[1])
+
+    def prepare(self, sel, q, k, v) -> tuple:
+        import jax.numpy as jnp
+
+        pq, _, pkv = sel.bucket
+        sq = q.shape[-2]
+        if pq != sq:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, pq - sq), (0, 0)))
+        if pkv != k.shape[-2]:
+            pad = ((0, 0), (0, 0), (0, pkv - k.shape[-2]), (0, 0))
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+        return q, k, v
+
+    def finalize(self, sel, out, q, k, v):
+        sq = q.shape[-2]
+        return out[..., :sq, :] if sel.bucket[0] != sq else out
+
+    def build_executable(self, sel, *, impl: str, interpret: bool):
+        pq, _, pkv = sel.bucket
+        m1, _, k1 = sel.strategy.l1
+        block_q, block_k = min(m1, pq), min(k1, pkv)
+        causal, window, softcap = self.causal, self.window, self.softcap
+
+        if impl == "pallas":
+            from repro.kernels.attention import flash_attention
+
+            def fn(q, k, v):
+                return flash_attention(
+                    q, k, v, block_q=block_q, block_k=block_k,
+                    causal=causal, window=window, softcap=softcap,
+                    interpret=interpret,
+                )
+
+        else:
+            from repro.kernels.ref import chunked_attention
+
+            def fn(q, k, v):
+                return chunked_attention(
+                    q, k, v, causal=causal, window=window, softcap=softcap,
+                    chunk=block_k,
+                )
+
+        return fn
+
+    def example_args(self, sel, *args) -> tuple:
+        import jax.numpy as jnp
+
+        pq, d, pkv = sel.bucket
+        if args:
+            b, hq, hkv = self.exec_key(*args)
+        else:
+            b, hq, hkv = 1, 1, 1
+        return (
+            jnp.zeros((b, hq, pq, d), jnp.float32),
+            jnp.zeros((b, hkv, pkv, d), jnp.float32),
+            jnp.zeros((b, hkv, pkv, d), jnp.float32),
+        )
+
+    def reference(self, q, k, v):
+        from repro.kernels.ref import ref_attention
+
+        return ref_attention(
+            q, k, v, causal=self.causal, window=self.window,
+            softcap=self.softcap,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Conv2D (im2col GEMM view)
+# ---------------------------------------------------------------------------
+
+
+@register_workload
+@dataclasses.dataclass(frozen=True)
+class Conv2dWorkload(Workload):
+    """Conv2D (VALID padding) lowered to the hierarchized GEMM space.
+
+    im2col turns Conv2D into a GEMM with M = b*h'*w' (dynamic batch and
+    spatial extents), N = cout, K = kh*kw*cin — after which the entire
+    lattice/analyzer/selector machinery applies unchanged (paper Table 4).
+    """
+
+    m: int | None  # b*h'*w', dynamic
+    cin: int
+    cout: int
+    kh: int
+    kw: int
+    stride: int = 1
+    dtype_bytes: int = 2
+    acc_bytes: int = 4
+    dynamic_dims: tuple[str, ...] = ("m",)
+
+    kind: ClassVar[str] = "conv2d"
+
+    @property
+    def N(self) -> int:
+        return self.cout
+
+    @property
+    def K(self) -> int:
+        return self.kh * self.kw * self.cin
+
+    def runtime_dims(self, m_runtime: int | None = None) -> Tile:
+        m = self.m if m_runtime is None else m_runtime
+        assert m is not None, "runtime output-pixel count required"
+        return (m, self.N, self.K)
+
+    def program(self, hw: HardwareSpec) -> RKernelProgram:
+        return _make_program(
+            hw,
+            self.kind,
+            {
+                0: ("load_tile_to_reg", "store_reg", "dot"),
+                1: ("im2col_hbm_to_vmem", "copy_vmem_to_hbm", ""),
+            },
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def _out_hw(self, x) -> tuple[int, int]:
+        _, h, w, _ = x.shape
+        return (
+            (h - self.kh) // self.stride + 1,
+            (w - self.kw) // self.stride + 1,
+        )
+
+    def dynamic_extent(self, x, w) -> int:
+        ho, wo = self._out_hw(x)
+        return x.shape[0] * ho * wo
+
+    def prepare(self, sel, x, w) -> tuple:
+        import jax.numpy as jnp
+
+        from repro.kernels.conv import im2col
+
+        cols, _ = im2col(x, self.kh, self.kw, self.stride)
+        # conv_general_dilated_patches orders features (cin, kh, kw).
+        wmat = w.transpose(2, 0, 1, 3).reshape(self.K, self.cout)
+        m = cols.shape[0]
+        if sel.padded_m != m:
+            cols = jnp.pad(cols, ((0, sel.padded_m - m), (0, 0)))
+        return cols, wmat
+
+    def finalize(self, sel, out, x, w):
+        ho, wo = self._out_hw(x)
+        m = x.shape[0] * ho * wo
+        return out[:m, : self.cout].reshape(x.shape[0], ho, wo, self.cout)
+
+    def build_executable(self, sel, *, impl: str, interpret: bool):
+        # The executable is the GEMM-view kernel on the im2col matrix; the
+        # im2col expansion itself runs eagerly in prepare() so the cached
+        # artifact depends only on the bucket, not on (b, h, w) directly.
+        return GemmWorkload(
+            M=None, N=self.N, K=self.K, dtype_bytes=self.dtype_bytes,
+            acc_bytes=self.acc_bytes,
+        ).build_executable(sel, impl=impl, interpret=interpret)
+
+    def example_args(self, sel, *args) -> tuple:
+        import jax.numpy as jnp
+
+        return (
+            jnp.zeros((sel.padded_m, self.K), jnp.float32),
+            jnp.zeros((self.K, self.N), jnp.float32),
+        )
+
+    def reference(self, x, w):
+        from repro.kernels.ref import ref_conv2d
+
+        return ref_conv2d(x, w, stride=self.stride, padding="VALID")

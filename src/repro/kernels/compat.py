@@ -1,0 +1,11 @@
+"""jax version-compat shims shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

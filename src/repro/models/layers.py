@@ -35,12 +35,33 @@ __all__ = [
     "mamba_forward",
     "mlp_forward",
     "moe_forward",
+    "set_attention_engine",
+    "get_attention_engine",
     "ATTN_CHUNK",
 ]
 
 # KV-chunk length of the flash-style attention scan; overridable by the
 # Vortex autoconfig (core/autoconfig.py picks it from the cost model).
 ATTN_CHUNK = 1024
+
+# Optional VortexEngine (core/engine.py) routing for the prefill attention
+# path: when a serving harness installs an engine, causal self-attention at
+# dynamic sequence lengths dispatches through the sample-free bucketed
+# pipeline (lattice-selected blocks, bounded executable cache) instead of
+# the inline chunked scan.  None keeps the inline path (training, sharded
+# runs, and every existing caller are unaffected).
+_ATTN_ENGINE = None
+
+
+def set_attention_engine(engine) -> None:
+    """Install (or clear, with None) the VortexEngine used by
+    :func:`attn_forward` for causal prefill attention."""
+    global _ATTN_ENGINE
+    _ATTN_ENGINE = engine
+
+
+def get_attention_engine():
+    return _ATTN_ENGINE
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -317,14 +338,23 @@ def attn_forward(
             )
         new_cache = {"k": k_cache, "v": v_cache}
     else:
-        out = chunked_attention(
-            q, k, v,
-            causal=causal,
-            window=spec.window,
-            softcap=cfg.attn_softcap,
-            chunk=ATTN_CHUNK,
-            rules=rules if mode == "train" else None,
-        )
+        if _ATTN_ENGINE is not None and causal and mode == "prefill":
+            # Dynamic-seq serving path: the engine selects (block_q, block_k)
+            # from the scored lattice for this runtime seq, pads to the
+            # induced bucket, and serves from the bounded executable cache.
+            out = _ATTN_ENGINE.attention(
+                q, k, v, causal=True, window=spec.window,
+                softcap=cfg.attn_softcap,
+            )
+        else:
+            out = chunked_attention(
+                q, k, v,
+                causal=causal,
+                window=spec.window,
+                softcap=cfg.attn_softcap,
+                chunk=ATTN_CHUNK,
+                rules=rules if mode == "train" else None,
+            )
         if mode == "prefill":
             pad = cache_len - s
             k_cache = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))

@@ -7,3 +7,29 @@ os.environ.pop("XLA_FLAGS", None)
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def optional_hypothesis():
+    """(given, settings, st): the real hypothesis API when installed, else
+    stand-ins that skip-mark property tests so the rest of the module keeps
+    running (requirements.txt pins hypothesis for CI)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # pragma: no cover - exercised only without the dep
+        import pytest
+
+        def given(**kwargs):
+            def deco(fn):
+                return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+            return deco
+
+        def settings(**kwargs):
+            return lambda fn: fn
+
+        class st:  # stand-in strategies namespace
+            floats = staticmethod(lambda *a, **k: None)
+            integers = staticmethod(lambda *a, **k: None)
+            sampled_from = staticmethod(lambda *a, **k: None)
+
+    return given, settings, st

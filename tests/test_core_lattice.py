@@ -2,7 +2,12 @@
 model, the hybrid analyzer and the runtime selector."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+# Only the property tests need hypothesis; the lattice-invariant and engine
+# tests must keep running without it.
+given, settings, st = optional_hypothesis()
 
 from repro.core import (
     GemmWorkload,

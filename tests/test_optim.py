@@ -3,8 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
+
+from conftest import optional_hypothesis
+
+# Only the int8-roundtrip property test needs hypothesis; the rest of the
+# optimizer suite must keep running without it.
+given, settings, st = optional_hypothesis()
 
 from repro.optim.adamw import (
     AdamWConfig,

@@ -1,7 +1,12 @@
 """Algorithm 1 reference interpreter: hierarchical == flat, for any strategy
 drawn from the lattice (hypothesis property)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+# Only the interpreter property test needs hypothesis; the program-structure
+# test must keep running without it.
+given, settings, st = optional_hypothesis()
 
 from repro.core import GemmWorkload, TPU_V5E
 from repro.core.candidates import generate_lattice
