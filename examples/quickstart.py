@@ -46,8 +46,10 @@ def main() -> None:
     t0 = time.perf_counter()
     eng = VortexEngine("host_cpu")
     gemm = eng.gemm_for(wl.N, wl.K)
+    table = gemm.selector.table  # materialize the selection table offline
     print(f" offline stage: {time.perf_counter() - t0:.2f}s "
-          f"({gemm.offline_stats.num_measured} tiles profiled; "
+          f"({gemm.offline_stats.num_measured} tiles profiled, "
+          f"{len(table)}-entry selection table swept; "
           f"sample-driven tuning would need hours)")
 
     print("\n== runtime: dynamic GEMM shapes, sample-free ==")
@@ -55,14 +57,17 @@ def main() -> None:
     b = jnp.asarray(rng.normal(size=(wl.K, wl.N)), jnp.float32)
     for m in (5, 62, 128, 200, 381):
         a = jnp.asarray(rng.normal(size=(m, wl.K)), jnp.float32)
+        t_sel = time.perf_counter()
         sel = gemm.select(m)
+        sel_us = (time.perf_counter() - t_sel) * 1e6
+        path = "table" if sel.select_seconds == 0.0 else "argmin"
         out = eng.gemm(a, b)
         ref = np.asarray(a) @ np.asarray(b)
         err = float(np.max(np.abs(np.asarray(out) - ref)))
         print(
             f" M={m:4d} -> bucket {sel.padded_m:4d} "
             f"(tile {sel.strategy.l1}, backend {sel.backend}, "
-            f"select {sel.select_seconds * 1e6:.0f}us, max|err|={err:.1e})"
+            f"select {sel_us:.1f}us via {path}, max|err|={err:.1e})"
         )
 
     print("\n== runtime: attention + conv through the same engine ==")

@@ -5,6 +5,7 @@ from repro.core.analyzer import (
     HybridAnalyzer,
     Profiler,
     ScoredLattice,
+    StackedLattices,
     TableProfiler,
     WallClockProfiler,
 )
@@ -21,6 +22,7 @@ from repro.core.cost_model import (
     gemm_runtime_costs,
     gemm_strategy_cost,
     l0_analytical_cost,
+    runtime_cost_matrix,
     runtime_costs,
     strategy_cost,
 )
@@ -39,6 +41,11 @@ from repro.core.rkernel import (
     Strategy,
     interpret_gemm,
     make_gemm_program,
+)
+from repro.core.selection_table import (
+    SelectionTable,
+    build_selection_table,
+    merge_breakpoints,
 )
 from repro.core.selector import RuntimeSelector, Selection, SelectorStats
 from repro.core.workloads import (

@@ -38,6 +38,7 @@ __all__ = [
     "WallClockProfiler",
     "TableProfiler",
     "ScoredLattice",
+    "StackedLattices",
     "HybridAnalyzer",
 ]
 
@@ -164,6 +165,68 @@ class ScoredLattice:
     def strategy_for(self, idx: int) -> Strategy:
         l1 = tuple(int(x) for x in self.l1_tiles[idx])
         return Strategy(tiles=(self.best_l0[idx], l1), backend=self.backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedLattices:
+    """All backends' scored lattices fused into flat candidate arrays.
+
+    The runtime selector and the offline selection-table builder both want
+    ONE numpy cost evaluation over the whole multi-backend strategy space
+    (the per-tile costs already encode each backend's level-0/1 behaviour),
+    so the per-backend ScoredLattices are concatenated once here and indexed
+    by a single global candidate id.  Backend order follows the mapping
+    order, so argmin tie-breaking is deterministic.
+    """
+
+    backends: tuple[str, ...]
+    scored: tuple[ScoredLattice, ...]
+    l1_tiles: np.ndarray  # (C, 3) int64, backends concatenated in order
+    l1_costs: np.ndarray  # (C,) seconds per layer-1 tile
+    backend_idx: np.ndarray  # (C,) int64: candidate -> backends index
+    offsets: tuple[int, ...]  # per-backend start offset into the flat arrays
+
+    @classmethod
+    def stack(cls, scored: Mapping[str, ScoredLattice]) -> "StackedLattices":
+        if not scored:
+            raise ValueError("need at least one scored lattice")
+        backends = tuple(scored)
+        sls = tuple(scored[b] for b in backends)
+        offsets, acc = [], 0
+        for sl in sls:
+            offsets.append(acc)
+            acc += sl.l1_costs.shape[0]
+        return cls(
+            backends=backends,
+            scored=sls,
+            l1_tiles=np.concatenate([sl.l1_tiles for sl in sls], axis=0),
+            l1_costs=np.concatenate([sl.l1_costs for sl in sls], axis=0),
+            backend_idx=np.concatenate(
+                [
+                    np.full(sl.l1_costs.shape[0], i, np.int64)
+                    for i, sl in enumerate(sls)
+                ]
+            ),
+            offsets=tuple(offsets),
+        )
+
+    @property
+    def num_candidates(self) -> int:
+        return int(self.l1_costs.shape[0])
+
+    def backend_of(self, idx: int) -> str:
+        return self.backends[int(self.backend_idx[idx])]
+
+    def strategy_for(self, idx: int) -> Strategy:
+        b = int(self.backend_idx[idx])
+        return self.scored[b].strategy_for(int(idx) - self.offsets[b])
+
+    def dynamic_periods(self, axes: Sequence[int]) -> tuple[int, ...]:
+        """Distinct l1 extents along the dynamic tile axes, across ALL
+        backends — the periods at which any candidate's grid cost ticks."""
+        return tuple(
+            sorted({int(t) for ax in axes for t in self.l1_tiles[:, ax]})
+        )
 
 
 class HybridAnalyzer:

@@ -43,6 +43,7 @@ __all__ = [
     "l0_analytical_cost",
     "strategy_cost",
     "runtime_costs",
+    "runtime_cost_matrix",
     "gemm_strategy_cost",
     "gemm_runtime_costs",
 ]
@@ -155,6 +156,48 @@ def strategy_cost(
     )
 
 
+def runtime_cost_matrix(
+    hw: HardwareSpec,
+    wl: Workload,
+    l1_tiles: np.ndarray,
+    l1_costs: np.ndarray,
+    ms: np.ndarray,
+    num_cores: int = 1,
+) -> np.ndarray:
+    """Fused Eq. 2-4 sweep: C candidates x B runtime extents -> (C, B).
+
+    ``l1_tiles`` may stack candidates from MANY backends — the grid-level
+    recursion only consumes the per-tile cost ``l1_costs`` (which already
+    encodes the backend's level-0/1 behaviour), so one numpy evaluation
+    covers the whole multi-backend strategy space.  ``ms`` is a vector of
+    dynamic extents; the offline table builder passes every breakpoint at
+    once, the runtime argmin fallback passes a single element.
+
+    Every arithmetic op is elementwise, so the (C,) column at ``ms=[m]`` is
+    bit-identical to the same column of a wider sweep containing ``m`` —
+    the table/argmin equivalence tests rely on this.
+    """
+    ms = np.atleast_1d(np.asarray(ms, np.float64))
+    M, N, K = wl.runtime_dims(ms)
+    m1 = l1_tiles[:, 0:1].astype(np.float64)  # (C, 1)
+    n1 = l1_tiles[:, 1:2].astype(np.float64)
+    k1 = l1_tiles[:, 2:3].astype(np.float64)
+    gm = np.ceil(M / m1)  # (C, B)
+    gn = np.ceil(N / n1)  # (C, 1) static dims, (C, B) dynamic-tied ones
+    gk = np.ceil(K / k1)
+    hbm_bw = hw.level(1).load_bandwidth
+    load_bytes, store_bytes = wl.tile_traffic_bytes(m1, n1, k1)
+    t_load = load_bytes / hbm_bw
+    t_store = store_bytes / hbm_bw
+    body = l1_costs[:, None]
+    t_tile = t_load + np.maximum(gk - 1.0, 0.0) * np.maximum(t_load, body) \
+        + body + t_store
+    f_parallel = np.ceil(gm * gn / max(num_cores, 1))
+    return np.broadcast_to(
+        f_parallel * t_tile, (l1_tiles.shape[0], ms.shape[0])
+    )
+
+
 def runtime_costs(
     hw: HardwareSpec,
     wl: Workload,
@@ -165,27 +208,15 @@ def runtime_costs(
 ) -> np.ndarray:
     """Vectorized layer-2 cost over many layer-1 candidates at runtime.
 
-    ``l1_tiles`` is (C, 3) int; ``l1_costs`` is (C,) seconds per layer-1 tile
-    (precomputed offline by the analyzer — at runtime only the cheap Eq. 2-4
-    arithmetic at the grid level runs, keeping selection overhead at the
-    microsecond scale that Fig. 14 demands).
+    ``l1_tiles`` is (C, 3) int — possibly backend-stacked (see
+    :class:`~repro.core.analyzer.StackedLattices`); ``l1_costs`` is (C,)
+    seconds per layer-1 tile (precomputed offline by the analyzer — at
+    runtime only the cheap Eq. 2-4 arithmetic at the grid level runs,
+    keeping selection overhead at the microsecond scale Fig. 14 demands).
     """
-    M, N, K = wl.runtime_dims(m_runtime)
-    m1 = l1_tiles[:, 0].astype(np.float64)
-    n1 = l1_tiles[:, 1].astype(np.float64)
-    k1 = l1_tiles[:, 2].astype(np.float64)
-    gm = np.ceil(M / m1)
-    gn = np.ceil(N / n1)
-    gk = np.ceil(K / k1)
-    hbm_bw = hw.level(1).load_bandwidth
-    load_bytes, store_bytes = wl.tile_traffic_bytes(m1, n1, k1)
-    t_load = load_bytes / hbm_bw
-    t_store = store_bytes / hbm_bw
-    body = l1_costs
-    t_tile = t_load + np.maximum(gk - 1.0, 0.0) * np.maximum(t_load, body) \
-        + body + t_store
-    f_parallel = np.ceil(gm * gn / max(num_cores, 1))
-    return f_parallel * t_tile
+    return runtime_cost_matrix(
+        hw, wl, l1_tiles, l1_costs, np.asarray([m_runtime]), num_cores
+    )[:, 0]
 
 
 # Back-compat aliases (the pre-generic names; same call signatures).

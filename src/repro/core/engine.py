@@ -9,8 +9,11 @@ Offline stage (no shape samples anywhere):
 
 Runtime stage:
   4. given the actual shape, select strategy + launch geometry + backend
-     (selector.py) via the analytical model only,
-  5. construct/fetch the executable for the induced bucket and run.
+     (selector.py) — a bisect into the offline-materialized selection table
+     (selection_table.py) on the hot path, the fused analytical argmin past
+     the table,
+  5. construct/fetch the executable for the induced bucket and run (skipping
+     pad/unpad entirely when the extent is already bucket-aligned).
 
 The engine is workload-generic: :class:`VortexKernel` drives ANY registered
 :class:`~repro.core.workloads.Workload` through the same lattice → analyzer →
@@ -29,7 +32,9 @@ Execution backends:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from typing import Callable
 
 import jax
@@ -145,11 +150,14 @@ class VortexKernel:
         jax.block_until_ready(jfn(*warm))
         return _CacheEntry(fn=jfn, compile_seconds=time.perf_counter() - t0)
 
-    def _entry_for(self, sel: Selection, args: tuple = ()) -> _CacheEntry:
-        key = (
+    def _exec_cache_key(self, sel: Selection, args: tuple) -> tuple:
+        return (
             sel.bucket, sel.strategy.l1, sel.backend, self._impl,
             self._wl.exec_key(*args) if args else (),
         )
+
+    def _entry_for(self, sel: Selection, args: tuple = ()) -> _CacheEntry:
+        key = self._exec_cache_key(sel, args)
         entry = self._exec_cache.get(key)
         if entry is None:
             entry = self._build_executable(sel, args)
@@ -162,7 +170,9 @@ class VortexKernel:
     def select(self, m: int) -> Selection:
         return self.selector.select(m)
 
-    def precompile(self, m_max: int, *args) -> int:
+    def precompile(
+        self, m_max: int, *args, max_workers: int | None = None
+    ) -> int:
         """Precompile every bucket reachable for M <= m_max (sample-free:
         the bucket set comes from the lattice, not from shape samples).
 
@@ -170,21 +180,51 @@ class VortexKernel:
         bucket (``exec_key``, e.g. attention's batch/head counts) need
         representative call ``args`` — otherwise the warmed entries sit
         under a key real calls never hit.  Only the args' shapes matter.
+
+        Missing buckets compile on a thread pool (XLA compilation releases
+        the GIL); ``max_workers`` caps it, defaulting to min(8, cpu count).
         """
-        n = 0
-        for sel in self.selector.selections_upto(m_max):
-            self._entry_for(sel, args)
-            n += 1
-        return n
+        sels = self.selector.selections_upto(m_max)
+        pending: dict[tuple, Selection] = {}
+        for sel in sels:
+            key = self._exec_cache_key(sel, args)
+            if key not in self._exec_cache and key not in pending:
+                pending[key] = sel
+        if pending:
+            workers = min(
+                max_workers or 8, os.cpu_count() or 1, len(pending)
+            )
+            if workers > 1:
+                # Register each entry as it completes: one failing compile
+                # must not discard the buckets that already built.
+                with ThreadPoolExecutor(max_workers=workers) as pool:
+                    futures = {
+                        pool.submit(self._build_executable, sel, args): key
+                        for key, sel in pending.items()
+                    }
+                    for fut in as_completed(futures):
+                        self._exec_cache[futures[fut]] = fut.result()
+            else:
+                for key, sel in pending.items():
+                    self._exec_cache[key] = self._build_executable(sel, args)
+        return len(sels)
 
     def __call__(self, *args) -> jax.Array:
         """Dynamic-shape dispatch: select on the runtime extent, pad to the
-        induced bucket, run the cached executable, undo the padding."""
-        m = self._wl.dynamic_extent(*args)
-        sel = self.select(m)
+        induced bucket, run the cached executable, undo the padding.
+
+        When the extent is already bucket-aligned and the workload's
+        prepare is pad-only, prepare/finalize are skipped entirely — the
+        steady-state call is table-bisect + dict-lookup + execute.
+        """
+        wl = self._wl
+        m = wl.dynamic_extent(*args)
+        sel = self.selector.select(m)
         entry = self._entry_for(sel, args)
-        out = entry.fn(*self._wl.prepare(sel, *args))
-        return self._wl.finalize(sel, out, *args)
+        if wl.prepare_is_pad_only and wl.is_bucket_aligned(sel, *args):
+            return entry.fn(*args)
+        out = entry.fn(*wl.prepare(sel, *args))
+        return wl.finalize(sel, out, *args)
 
     @property
     def cache_info(self) -> dict:
@@ -201,8 +241,13 @@ class VortexKernel:
         s = self.selector.stats
         return {
             "selects": s.selects,
+            "table_hits": s.table_hits,
+            "lru_hits": s.lru_hits,
+            "argmin_misses": s.argmin_misses,
             "cache_hits": s.cache_hits,
             "mean_select_us": s.mean_select_us,
+            "table_builds": s.table_builds,
+            "table_build_seconds": s.table_build_seconds,
         }
 
 
@@ -254,6 +299,11 @@ class VortexEngine:
         self._interpret = interpret
         self._kernels: dict[tuple, VortexKernel] = {}
         self._scored_cache: dict[tuple, ScoredLattice] = {}
+        # Zero-rebuild hot path: raw call-site tuples -> compiled kernel.
+        # Steady-state gemm/attention/conv2d calls hash a tuple of ints
+        # (shapes/flags straight off the arrays) instead of constructing a
+        # Workload dataclass and hashing its signature on every call.
+        self._dispatch: dict[tuple, VortexKernel] = {}
 
     # -- workload plumbing --------------------------------------------------
 
@@ -277,11 +327,23 @@ class VortexEngine:
     def gemm_for(self, n: int, k: int) -> VortexKernel:
         return self.kernel_for(GemmWorkload(M=None, N=n, K=k))
 
+    def _kernel_at(self, key: tuple, make_wl) -> VortexKernel:
+        """Raw-tuple hot-path lookup: the Workload is only constructed (and
+        its dataclass signature only hashed) on the first call per key."""
+        kern = self._dispatch.get(key)
+        if kern is None:
+            kern = self.kernel_for(make_wl())
+            self._dispatch[key] = kern
+        return kern
+
     # -- entry points -------------------------------------------------------
 
     def gemm(self, a: jax.Array, b: jax.Array) -> jax.Array:
         """C[M,N] = A[M,K] @ B[K,N] with dynamic M."""
-        return self.gemm_for(b.shape[1], b.shape[0])(a, b)
+        return self._kernel_at(
+            ("gemm", b.shape[0], b.shape[1]),
+            lambda: GemmWorkload(M=None, N=b.shape[1], K=b.shape[0]),
+        )(a, b)
 
     def attention(
         self,
@@ -299,21 +361,25 @@ class VortexEngine:
         head_dim) with q_heads % kv_heads == 0 (GQA).  Requires causal=True
         (padding correctness comes from the causal mask; see workloads.py).
         """
-        wl = AttentionWorkload(
-            seq=None, head_dim=q.shape[-1], causal=causal, window=window,
-            softcap=softcap,
-        )
-        return self.kernel_for(wl)(q, k, v)
+        return self._kernel_at(
+            ("attention", q.shape[-1], causal, window, softcap),
+            lambda: AttentionWorkload(
+                seq=None, head_dim=q.shape[-1], causal=causal,
+                window=window, softcap=softcap,
+            ),
+        )(q, k, v)
 
     def conv2d(
         self, x: jax.Array, w: jax.Array, *, stride: int = 1
     ) -> jax.Array:
         """Conv2D (VALID): x (b, h, w, cin); w (kh, kw, cin, cout)."""
         kh, kw, cin, cout = w.shape
-        wl = Conv2dWorkload(
-            m=None, cin=cin, cout=cout, kh=kh, kw=kw, stride=stride
-        )
-        return self.kernel_for(wl)(x, w)
+        return self._kernel_at(
+            ("conv2d", kh, kw, cin, cout, stride),
+            lambda: Conv2dWorkload(
+                m=None, cin=cin, cout=cout, kh=kh, kw=kw, stride=stride
+            ),
+        )(x, w)
 
     # -- introspection ------------------------------------------------------
 
@@ -342,17 +408,26 @@ class VortexEngine:
             agg = out.setdefault(
                 kind,
                 {
-                    "signatures": 0, "selects": 0, "select_cache_hits": 0,
-                    "select_us_sum": 0.0, "exec_entries": 0, "exec_hits": 0,
+                    "signatures": 0, "selects": 0, "select_table_hits": 0,
+                    "select_lru_hits": 0, "select_argmin_misses": 0,
+                    "select_cache_hits": 0, "select_us_sum": 0.0,
+                    "table_entries": 0, "table_build_s": 0.0,
+                    "exec_entries": 0, "exec_hits": 0,
                     "compile_seconds": 0.0,
                 },
             )
             sstats = kernel.selector.stats
             cinfo = kernel.cache_info
+            table = kernel.selector.table_if_built
             agg["signatures"] += 1
             agg["selects"] += sstats.selects
+            agg["select_table_hits"] += sstats.table_hits
+            agg["select_lru_hits"] += sstats.lru_hits
+            agg["select_argmin_misses"] += sstats.argmin_misses
             agg["select_cache_hits"] += sstats.cache_hits
             agg["select_us_sum"] += sstats.select_seconds * 1e6
+            agg["table_entries"] += len(table) if table is not None else 0
+            agg["table_build_s"] += sstats.table_build_seconds
             agg["exec_entries"] += cinfo["entries"]
             agg["exec_hits"] += cinfo["hits"]
             agg["compile_seconds"] += cinfo["compile_seconds"]

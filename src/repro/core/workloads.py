@@ -209,9 +209,22 @@ class Workload:
     # ``sel`` below is a selector.Selection; jax is imported lazily so the
     # analytical core stays importable without an accelerator stack.
 
+    # True when ``prepare`` only pads the dynamic dims (and ``finalize``
+    # only slices them back): the engine then skips BOTH entirely when the
+    # runtime extent is already bucket-aligned — the zero-rebuild hot path
+    # does no padding work at all.  Workloads whose prepare transforms data
+    # (conv's im2col) keep this False.
+    prepare_is_pad_only: ClassVar[bool] = False
+
     def dynamic_extent(self, *args) -> int:
         """The runtime value of the dynamic dim, from the call arguments."""
         raise NotImplementedError
+
+    def is_bucket_aligned(self, sel, *args) -> bool:
+        """True when the call args already match ``sel``'s bucket exactly
+        (prepare/finalize would be identities).  Only consulted when
+        ``prepare_is_pad_only`` is set."""
+        return False
 
     def exec_key(self, *args) -> tuple:
         """Extra executable-cache key parts beyond the bucket (outer dims
@@ -263,6 +276,7 @@ class GemmWorkload(Workload):
     dynamic_dims: tuple[str, ...] = ("M",)
 
     kind: ClassVar[str] = "gemm"
+    prepare_is_pad_only: ClassVar[bool] = True
 
     def runtime_dims(self, m_runtime: int | None = None) -> Tile:
         m = self.M if m_runtime is None else m_runtime
@@ -288,6 +302,9 @@ class GemmWorkload(Workload):
 
     def dynamic_extent(self, a, b) -> int:
         return a.shape[0]
+
+    def is_bucket_aligned(self, sel, a, b) -> bool:
+        return sel.padded_m == a.shape[0]
 
     def prepare(self, sel, a, b) -> tuple:
         import jax.numpy as jnp
@@ -381,6 +398,7 @@ class AttentionWorkload(Workload):
 
     kind: ClassVar[str] = "attention"
     dynamic_tile_axes: ClassVar[tuple[int, ...]] = (0, 2)
+    prepare_is_pad_only: ClassVar[bool] = True
 
     def __post_init__(self) -> None:
         if not self.causal:
@@ -448,6 +466,11 @@ class AttentionWorkload(Workload):
     def exec_key(self, q, k, v) -> tuple:
         # Outer (batch, heads) dims specialize the compiled artifact.
         return (q.shape[0], q.shape[1], k.shape[1])
+
+    def is_bucket_aligned(self, sel, q, k, v) -> bool:
+        return (
+            sel.bucket[0] == q.shape[-2] and sel.bucket[2] == k.shape[-2]
+        )
 
     def prepare(self, sel, q, k, v) -> tuple:
         import jax.numpy as jnp

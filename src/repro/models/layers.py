@@ -17,6 +17,7 @@ layers never mention physical mesh axes.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Any
 
@@ -37,6 +38,7 @@ __all__ = [
     "moe_forward",
     "set_attention_engine",
     "get_attention_engine",
+    "attention_engine",
     "ATTN_CHUNK",
 ]
 
@@ -47,21 +49,40 @@ ATTN_CHUNK = 1024
 # Optional VortexEngine (core/engine.py) routing for the prefill attention
 # path: when a serving harness installs an engine, causal self-attention at
 # dynamic sequence lengths dispatches through the sample-free bucketed
-# pipeline (lattice-selected blocks, bounded executable cache) instead of
-# the inline chunked scan.  None keeps the inline path (training, sharded
-# runs, and every existing caller are unaffected).
+# pipeline instead of the inline chunked scan.  The steady-state dispatch is
+# constant time: the engine resolves the call site from a raw shape tuple
+# and the selector serves unseen sequence lengths from the
+# offline-materialized breakpoint table (core/selection_table.py), so a
+# high-cardinality stream of prefill lengths costs a bisect per call — no
+# per-call workload construction, no argmin.  None keeps the inline path
+# (training, sharded runs, and every existing caller are unaffected).
 _ATTN_ENGINE = None
 
 
-def set_attention_engine(engine) -> None:
+def set_attention_engine(engine):
     """Install (or clear, with None) the VortexEngine used by
-    :func:`attn_forward` for causal prefill attention."""
+    :func:`attn_forward` for causal prefill attention.  Returns the
+    previously-installed engine so callers can restore it."""
     global _ATTN_ENGINE
+    prev = _ATTN_ENGINE
     _ATTN_ENGINE = engine
+    return prev
 
 
 def get_attention_engine():
     return _ATTN_ENGINE
+
+
+@contextlib.contextmanager
+def attention_engine(engine):
+    """Scoped engine install: route prefill attention through ``engine``
+    inside the block, restoring the previous routing on exit (exception
+    safe — what serving harnesses and tests should use)."""
+    prev = set_attention_engine(engine)
+    try:
+        yield engine
+    finally:
+        set_attention_engine(prev)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -210,24 +210,46 @@ def test_attention_bucket_pads_both_seq_dims():
 )
 def test_buckets_upto_matches_bruteforce(wl):
     """The breakpoint-derived precompilation set must equal the exhaustive
-    per-M enumeration (it is a speedup, not an approximation)."""
+    per-M enumeration (it is a speedup, not an approximation).  The brute
+    side runs with the selection table disabled, so this cross-checks the
+    table-derived set against the pure argmin path."""
     scored = {"mxu": _scored(TPU_V5E, wl, "mxu")}
     fast = RuntimeSelector(TPU_V5E, wl, scored)
-    brute = RuntimeSelector(TPU_V5E, wl, scored, cache_size=1 << 16)
+    brute = RuntimeSelector(
+        TPU_V5E, wl, scored, cache_size=1 << 16, table_m_max=0
+    )
     m_max = 700
     expect = sorted({brute.select(m).padded_m for m in range(1, m_max + 1)})
     assert fast.buckets_upto(m_max) == expect
 
 
 def test_selection_cache_is_lru_bounded():
+    """With the table disabled, the argmin fallback's LRU stays bounded."""
+    wl = GemmWorkload(M=None, N=256, K=256)
+    sel = RuntimeSelector(
+        HOST_CPU, wl, {"simd": _scored(HOST_CPU, wl, "simd")},
+        cache_size=8, table_m_max=0,
+    )
+    for m in range(1, 100):
+        sel.select(m)
+    assert len(sel._cache) == 8
+    assert sel.stats.selects == 99
+    assert sel.stats.argmin_misses == 99
+    assert sel.stats.table_hits == 0
+
+
+def test_table_serves_without_lru_growth():
+    """With the table on (the default), a high-cardinality shape stream is
+    served entirely by table hits: no LRU entries, no argmin misses."""
     wl = GemmWorkload(M=None, N=256, K=256)
     sel = RuntimeSelector(
         HOST_CPU, wl, {"simd": _scored(HOST_CPU, wl, "simd")}, cache_size=8
     )
     for m in range(1, 100):
         sel.select(m)
-    assert len(sel._cache) == 8
-    assert sel.stats.selects == 99
+    assert sel.stats.table_hits == 99
+    assert sel.stats.argmin_misses == 0
+    assert len(sel._cache) == 0
 
 
 # ---------------------------------------------------------------------------
@@ -262,11 +284,9 @@ def test_attn_forward_routes_through_engine():
 
     y_ref, _ = layers.attn_forward(p, x, cfg, spec, rules, **kw)
     eng = VortexEngine("host_cpu", empirical_levels=())
-    layers.set_attention_engine(eng)
-    try:
+    with layers.attention_engine(eng):
         y_eng, _ = layers.attn_forward(p, x, cfg, spec, rules, **kw)
-    finally:
-        layers.set_attention_engine(None)
+    assert layers.get_attention_engine() is None  # scoped install restored
     np.testing.assert_allclose(
         np.asarray(y_eng), np.asarray(y_ref), rtol=1e-4, atol=1e-4
     )

@@ -1,0 +1,233 @@
+"""Selection-table correctness: the offline-materialized breakpoint table
+must agree EXACTLY with the runtime argmin path for every M in range (it is
+a memoization, not an approximation), extend itself past m_max, and keep
+the separated table/LRU/argmin overhead accounting honest."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    HOST_CPU,
+    TPU_V5E,
+    AttentionWorkload,
+    Conv2dWorkload,
+    GemmWorkload,
+    StackedLattices,
+    build_selection_table,
+    merge_breakpoints,
+)
+from repro.core.analyzer import AnalyticalProfiler, HybridAnalyzer
+from repro.core.candidates import generate_lattice
+from repro.core.engine import VortexEngine
+from repro.core.selector import RuntimeSelector
+
+
+def _scored(hw, wl, backend):
+    lat = generate_lattice(hw, wl, backend)
+    analyzer = HybridAnalyzer(
+        hw, wl, profiler=AnalyticalProfiler(hw), empirical_levels=()
+    )
+    return analyzer.score(lat)
+
+
+def _scored_all(hw, wl):
+    return {b: _scored(hw, wl, b) for b in hw.backends}
+
+
+def _key(s):
+    return (s.bucket, s.strategy.tiles, s.backend, s.grid, s.padded_m)
+
+
+WLS = [
+    GemmWorkload(M=None, N=768, K=2304),
+    AttentionWorkload(seq=None, head_dim=64),
+    Conv2dWorkload(m=None, cin=16, cout=32, kh=3, kw=3),
+]
+WL_IDS = [wl.kind for wl in WLS]
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: table == argmin for EVERY M in [1, m_max]
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wl", WLS, ids=WL_IDS)
+def test_table_matches_argmin_for_every_m(wl):
+    """SelectionTable.lookup(m) must equal the pure argmin selection
+    (bucket, strategy, backend, grid, padded_m AND predicted cost) for all
+    M in [1, m_max], with ALL hardware backends stacked."""
+    m_max = 333  # not tile-aligned on purpose
+    scored = _scored_all(TPU_V5E, wl)
+    tabled = RuntimeSelector(TPU_V5E, wl, scored, table_m_max=m_max)
+    argmin = RuntimeSelector(TPU_V5E, wl, scored, table_m_max=0)
+    for m in range(1, m_max + 1):
+        a = tabled.select(m)
+        b = argmin._select_argmin(m)
+        assert _key(a) == _key(b), m
+        # Bit-identical float arithmetic between sweep and per-M argmin.
+        assert a.predicted_cost == b.predicted_cost, m
+    assert tabled.stats.table_hits == m_max
+    assert tabled.stats.argmin_misses == 0
+
+
+@pytest.mark.parametrize("wl", WLS, ids=WL_IDS)
+def test_fallback_and_extend_past_m_max(wl):
+    """Past the table, selection falls back to argmin (identical result)
+    and the table extends itself by doubling so the next unseen extent in
+    range is a table hit."""
+    scored = _scored_all(TPU_V5E, wl)
+    sel = RuntimeSelector(TPU_V5E, wl, scored, table_m_max=64)
+    ref = RuntimeSelector(TPU_V5E, wl, scored, table_m_max=0)
+    assert sel.table.m_max == 64
+
+    beyond = 200
+    got = sel.select(beyond)
+    assert _key(got) == _key(ref._select_argmin(beyond))
+    assert sel.stats.argmin_misses == 1
+    # Doubled 64 -> 128 -> 256: the miss grew the table over the extent.
+    assert sel.table.m_max == 256
+
+    after = sel.select(199)  # unseen, now covered
+    assert sel.stats.table_hits == 1
+    assert _key(after) == _key(ref._select_argmin(199))
+
+
+def test_degenerate_extent_bypasses_table():
+    """m < 1 is outside every table interval: it must take the argmin path
+    (which prices an empty extent exactly: zero grid rows, zero padding),
+    not silently read the table's last entry."""
+    wl = GemmWorkload(M=None, N=256, K=256)
+    scored = {"simd": _scored(HOST_CPU, wl, "simd")}
+    sel = RuntimeSelector(HOST_CPU, wl, scored)
+    ref = RuntimeSelector(HOST_CPU, wl, scored, table_m_max=0)
+    got = sel.select(0)
+    assert sel.stats.table_hits == 0
+    assert sel.stats.argmin_misses == 1
+    assert got.padded_m == 0 and got.grid[0] == 0
+    assert _key(got) == _key(ref._select_argmin(0))
+    assert sel.table.m_max == 4096  # no spurious extension for m < 1
+
+
+def test_extension_respects_limit():
+    wl = GemmWorkload(M=None, N=256, K=256)
+    scored = {"simd": _scored(HOST_CPU, wl, "simd")}
+    sel = RuntimeSelector(
+        HOST_CPU, wl, scored, table_m_max=32, table_extend_limit=64
+    )
+    sel.select(1000)  # beyond the extension limit
+    assert sel.table.m_max == 32  # untouched
+    sel.select(1000)
+    assert sel.stats.lru_hits == 1  # LRU backs the uncovered tail
+
+
+# ---------------------------------------------------------------------------
+# Table structure
+# ---------------------------------------------------------------------------
+
+
+def test_merge_breakpoints_divisor_free():
+    """Heap-merged interval starts == the brute-force breakpoint set."""
+    periods, m_max = [3, 4, 6], 40
+    expect = sorted(
+        {1}
+        | {j * t + 1 for t in periods for j in range(1, m_max) if j * t + 1 <= m_max}
+    )
+    assert merge_breakpoints(periods, m_max) == expect
+
+
+@pytest.mark.parametrize("wl", WLS, ids=WL_IDS)
+def test_table_entries_are_merged_and_sorted(wl):
+    scored = _scored_all(TPU_V5E, wl)
+    table = build_selection_table(
+        TPU_V5E, wl, StackedLattices.stack(scored), 512
+    )
+    assert table.starts[0] == 1
+    assert table.starts == sorted(set(table.starts))
+    # Merging means adjacent entries always differ.
+    for a, b in zip(table.entries, table.entries[1:]):
+        assert _key(a) != _key(b)
+    assert len(table) <= table.num_intervals
+
+
+def test_table_entries_carry_zero_select_seconds():
+    """Satellite: cached selections must not re-report the stale latency of
+    their original miss — table entries are stamped 0.0 and the per-serve
+    accounting lives in SelectorStats."""
+    wl = GemmWorkload(M=None, N=256, K=256)
+    sel = RuntimeSelector(HOST_CPU, wl, _scored_all(HOST_CPU, wl))
+    s = sel.select(77)
+    assert s.select_seconds == 0.0
+    assert sel.stats.mean_select_us == 0.0  # no argmin misses yet
+    sel.select(77)
+    assert sel.stats.selects == 2
+    assert sel.stats.table_hits == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine hot path
+# ---------------------------------------------------------------------------
+
+
+def test_engine_dispatch_reuses_kernel_without_workload_rebuild():
+    """Steady-state engine calls hit the raw-tuple dispatch dict: one
+    kernel per call-site signature, found without constructing Workloads."""
+    import jax.numpy as jnp
+
+    eng = VortexEngine("host_cpu", empirical_levels=())
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    for m in (8, 16, 13):
+        eng.gemm(jnp.asarray(rng.normal(size=(m, 64)), jnp.float32), b)
+    assert len(eng._dispatch) == 1
+    assert len(eng._kernels) == 1
+    assert eng._dispatch[("gemm", 64, 48)] is next(iter(eng._kernels.values()))
+
+
+def test_stats_does_not_build_tables():
+    """Introspection must not charge a breakpoint sweep to idle kernels."""
+    eng = VortexEngine("host_cpu", empirical_levels=())
+    kern = eng.gemm_for(48, 64)  # kernel built, never dispatched
+    s = eng.stats()["gemm"]
+    assert s["table_entries"] == 0
+    assert s["table_build_s"] == 0.0
+    assert kern.selector.table_if_built is None
+
+
+def test_engine_skips_pad_when_bucket_aligned():
+    """A bucket-aligned extent must produce the same result via the no-pad
+    fast path as the padded general path produces for a misaligned one."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import ref_gemm
+
+    eng = VortexEngine("host_cpu", empirical_levels=())
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(rng.normal(size=(96, 80)), jnp.float32)
+    kern = eng.gemm_for(80, 96)
+    aligned_m = kern.select(64).padded_m  # an exactly-bucket-sized extent
+    a = jnp.asarray(rng.normal(size=(aligned_m, 96)), jnp.float32)
+    assert kern.workload.is_bucket_aligned(kern.select(aligned_m), a, b)
+    np.testing.assert_allclose(
+        np.asarray(eng.gemm(a, b)), np.asarray(ref_gemm(a, b)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_parallel_precompile_matches_serial():
+    """Threaded precompile warms exactly the keys serial precompile would,
+    and subsequent calls add no entries."""
+    import jax.numpy as jnp
+
+    eng_p = VortexEngine("host_cpu", empirical_levels=())
+    eng_s = VortexEngine("host_cpu", empirical_levels=())
+    wl = GemmWorkload(M=None, N=48, K=64)
+    n_p = eng_p.kernel_for(wl).precompile(128)
+    n_s = eng_s.kernel_for(wl).precompile(128, max_workers=1)
+    assert n_p == n_s
+    kp, ks = eng_p.kernel_for(wl), eng_s.kernel_for(wl)
+    assert set(kp._exec_cache) == set(ks._exec_cache)
+    entries = kp.cache_info["entries"]
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    for m in (3, 65, 127):
+        eng_p.gemm(jnp.asarray(rng.normal(size=(m, 64)), jnp.float32), b)
+    assert kp.cache_info["entries"] == entries
