@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import GemmWorkload, TPU_V5E, VortexGemm
+from repro.core import GemmWorkload, TPU_V5E, VortexKernel
 from benchmarks.util import emit
 
 K = 1024
@@ -20,9 +20,9 @@ K = 1024
 def main() -> None:
     for N in (1024, 2048, 4096):
         wl = GemmWorkload(M=None, N=N, K=K)
-        both = VortexGemm(TPU_V5E, wl, backends=("mxu", "vpu"))
-        mxu = VortexGemm(TPU_V5E, wl, backends=("mxu",))
-        vpu = VortexGemm(TPU_V5E, wl, backends=("vpu",))
+        both = VortexKernel(TPU_V5E, wl, backends=("mxu", "vpu"))
+        mxu = VortexKernel(TPU_V5E, wl, backends=("mxu",))
+        vpu = VortexKernel(TPU_V5E, wl, backends=("vpu",))
         gains_mxu, gains_vpu, routed_vpu = [], [], 0
         for m in range(1, 17):
             c_a = both.select(m).predicted_cost

@@ -13,7 +13,7 @@ import time
 
 import numpy as np
 
-from repro.core import GemmWorkload, HOST_CPU, TPU_V5E, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, TPU_V5E, VortexKernel
 from benchmarks.util import emit
 
 N, K = 768, 1152
@@ -32,7 +32,7 @@ def main() -> None:
     preds = {}
     for name, hw, levels, backends in configs:
         t0 = time.perf_counter()
-        eng = VortexGemm(hw, wl, empirical_levels=levels, backends=backends)
+        eng = VortexKernel(hw, wl, empirical_levels=levels, backends=backends)
         offline = time.perf_counter() - t0
         cost = float(np.mean([eng.select(m).predicted_cost for m in MS]))
         preds[name] = cost

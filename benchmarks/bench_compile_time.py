@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import GemmWorkload, HOST_CPU, TPU_V5E, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, TPU_V5E, VortexKernel
 from repro.core.baselines import SampleDrivenCompiler
 from benchmarks.util import emit
 
@@ -36,7 +36,7 @@ def main() -> None:
     for name, kw in modes.items():
         hw = kw.pop("hw")
         t0 = time.perf_counter()
-        eng = VortexGemm(hw, wl, **kw)
+        eng = VortexKernel(hw, wl, **kw)
         dt = time.perf_counter() - t0
         vortex_seconds[name] = dt
         emit(

@@ -22,7 +22,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, VortexKernel
 from repro.core.baselines import SampleDrivenCompiler, VendorBaseline
 from benchmarks.util import emit, time_call
 
@@ -55,7 +55,7 @@ def main() -> None:
         ]
 
         # --- steady state (warm executables) ---------------------------
-        vortex = VortexGemm(HOST_CPU, wl)
+        vortex = VortexKernel(HOST_CPU, wl)
         vendor = VendorBaseline(wl)
         sampled = SampleDrivenCompiler(
             HOST_CPU, wl, samples=[ms[len(ms) // 2]], search_budget=3,
@@ -75,7 +75,7 @@ def main() -> None:
             )
 
         # --- dynamic stream (fresh engines, compile included) ----------
-        t_vx = _stream_seconds(VortexGemm(HOST_CPU, wl), mats)
+        t_vx = _stream_seconds(VortexKernel(HOST_CPU, wl), mats)
         t_vd = _stream_seconds(VendorBaseline(wl), mats)
         stream_sp.append(t_vd / t_vx)
         emit(

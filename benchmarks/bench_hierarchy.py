@@ -21,7 +21,7 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, VortexKernel
 from repro.core.analyzer import HybridAnalyzer, WallClockProfiler
 from repro.core.candidates import CandidateLattice, generate_lattice
 from repro.core.selector import RuntimeSelector
@@ -62,7 +62,7 @@ def _measure(tile_for, mats):
 
 def main() -> None:
     wl = GemmWorkload(M=None, N=N, K=K)
-    vortex = VortexGemm(HOST_CPU, wl)
+    vortex = VortexKernel(HOST_CPU, wl)
     backend = HOST_CPU.default_backend
     rng = np.random.default_rng(0)
     mats = {

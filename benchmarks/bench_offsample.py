@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, VortexKernel
 from repro.core.baselines import SampleDrivenCompiler
 from benchmarks.util import emit, time_call
 
@@ -18,7 +18,7 @@ N, K = 768, 2304 // 2  # paper's BERT GEMM (K halved to stay CPU-friendly)
 
 def main() -> None:
     wl = GemmWorkload(M=None, N=N, K=K)
-    vortex = VortexGemm(HOST_CPU, wl)
+    vortex = VortexKernel(HOST_CPU, wl)
     sampled = SampleDrivenCompiler(
         HOST_CPU, wl, samples=[128, 160, 192, 224, 255],
         search_budget=3, repeats=2,

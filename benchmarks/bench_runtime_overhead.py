@@ -12,14 +12,14 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, VortexKernel
 from benchmarks.util import emit, time_call
 
 
 def main() -> None:
     for size in (64, 256, 1024):
         wl = GemmWorkload(M=None, N=size, K=size)
-        eng = VortexGemm(HOST_CPU, wl)
+        eng = VortexKernel(HOST_CPU, wl)
         # cold selection: fresh M values
         t0 = time.perf_counter()
         n_cold = 200

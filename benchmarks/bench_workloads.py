@@ -3,7 +3,8 @@
 The paper's runtime claim (Fig. 14) is that sample-free selection stays in
 the microseconds regime and the executable cache stays bounded by the
 lattice, not by the number of distinct runtime shapes.  This benchmark
-drives GEMM, flash attention and Conv2D through ONE VortexEngine and
+drives GEMM, flash attention and Conv2D through ONE vortex Engine
+session (repro.vortex) and
 reports, per workload kind:
 
   * mean per-call dispatch overhead for UNSEEN shapes on the
@@ -30,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VortexEngine, get_hardware
+from repro.core import get_hardware
+from repro.vortex import Engine
 from repro.core.selector import RuntimeSelector
 from benchmarks.util import emit
 
@@ -119,7 +121,7 @@ def main() -> None:
     args = ap.parse_args()
 
     hardware = "host_cpu"
-    eng = VortexEngine(
+    eng = Engine(
         hardware, empirical_levels=(() if args.smoke else None)
     )
     hw = get_hardware(hardware)
@@ -135,7 +137,7 @@ def main() -> None:
         m: jnp.asarray(rng.normal(size=(m, K)), jnp.float32) for m in gemm_ms
     }
     gemm_calls = [
-        (lambda a=mats[m]: eng.gemm(a, b)) for m in gemm_ms * 2
+        (lambda a=mats[m]: eng.dispatch("gemm", a, b)) for m in gemm_ms * 2
     ]
     gemm_us = _bench("gemm", gemm_calls) * 1e6
 
@@ -148,7 +150,7 @@ def main() -> None:
             jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32),
         )
     attn_calls = [
-        (lambda t=qkv[s]: eng.attention(*t)) for s in attn_seqs * 2
+        (lambda t=qkv[s]: eng.dispatch("attention", *t)) for s in attn_seqs * 2
     ]
     attn_us = _bench("attention", attn_calls) * 1e6
 
@@ -159,7 +161,7 @@ def main() -> None:
         for bs in conv_batches
     }
     conv_calls = [
-        (lambda x=xs[bs]: eng.conv2d(x, wconv)) for bs in conv_batches * 2
+        (lambda x=xs[bs]: eng.dispatch("conv2d", x, wconv)) for bs in conv_batches * 2
     ]
     conv_us = _bench("conv2d", conv_calls) * 1e6
 

@@ -32,8 +32,8 @@ def main() -> None:
         s = int(rng.integers(4, 120))
         toks = rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)
         out = server.generate(Request(tokens=toks, max_new=4))
-        bp = server._batch_bucket(b)
-        sp = server._bucket(s)
+        bp = server.batch_bucket(b)
+        sp = server.seq_bucket(s)
         total_pad += (bp * sp) / (b * s) - 1.0
         print(f"req {i:2d}: ({b:2d},{s:3d}) -> bucket ({bp:2d},{sp:3d}) "
               f"out {out.shape}")

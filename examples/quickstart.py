@@ -1,4 +1,4 @@
-"""Quickstart: the Vortex sample-free workflow across workloads.
+"""Quickstart: the Vortex sample-free workflow through the public API.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -7,23 +7,25 @@ Walks the paper's pipeline end to end:
   2. offline  — hybrid analyzer scores the lattice,
   3. runtime  — per-shape strategy selection + bucketed execution,
 and prints what the paper's figures report: candidate counts, offline
-seconds, selection overhead, padding waste.  GEMM, flash attention and
-Conv2D all route through the SAME engine — one workload registry, one
-scored-lattice cache, one bucketed executable cache (DESIGN.md §3).
+seconds, selection overhead, padding waste.  Everything goes through
+`repro.vortex` — ONE surface (DESIGN.md § Public API):
+
+  * `vortex.compile(workload)` -> a CompiledOp handle (call / select /
+    precompile / stats),
+  * `vortex.ops.<kind>` — every `@register_workload` kind, served by the
+    ambient engine session,
+  * `vortex.use(engine)` — contextvar-scoped session installation.
 """
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    AttentionWorkload,
-    GemmWorkload,
-    TPU_V5E,
-    VortexEngine,
-)
+from repro.core import AttentionWorkload, GemmWorkload, TPU_V5E
 from repro.core.candidates import generate_lattice
 from repro.kernels.ref import ref_attention, ref_conv2d
+from repro import vortex
+from repro.vortex import Engine, EngineConfig
 
 
 def main() -> None:
@@ -42,52 +44,54 @@ def main() -> None:
     print(f" attention (seq-dynamic) lattice: {alat.num_candidates()} "
           f"candidates through the same Algorithm 2")
 
-    print("\n== offline: build the engine on the host CPU ==")
+    print("\n== offline: an engine session on the host CPU ==")
     t0 = time.perf_counter()
-    eng = VortexEngine("host_cpu")
-    gemm = eng.gemm_for(wl.N, wl.K)
-    table = gemm.selector.table  # materialize the selection table offline
+    eng = Engine(EngineConfig(hardware="host_cpu"))
+    gemm = vortex.compile(wl, engine=eng)
+    table = gemm.kernel.selector.table  # materialize the table offline
     print(f" offline stage: {time.perf_counter() - t0:.2f}s "
-          f"({gemm.offline_stats.num_measured} tiles profiled, "
+          f"({gemm.stats()['offline'].num_measured} tiles profiled, "
           f"{len(table)}-entry selection table swept; "
           f"sample-driven tuning would need hours)")
 
     print("\n== runtime: dynamic GEMM shapes, sample-free ==")
     rng = np.random.default_rng(0)
     b = jnp.asarray(rng.normal(size=(wl.K, wl.N)), jnp.float32)
-    for m in (5, 62, 128, 200, 381):
-        a = jnp.asarray(rng.normal(size=(m, wl.K)), jnp.float32)
-        t_sel = time.perf_counter()
-        sel = gemm.select(m)
-        sel_us = (time.perf_counter() - t_sel) * 1e6
-        path = "table" if sel.select_seconds == 0.0 else "argmin"
-        out = eng.gemm(a, b)
-        ref = np.asarray(a) @ np.asarray(b)
-        err = float(np.max(np.abs(np.asarray(out) - ref)))
-        print(
-            f" M={m:4d} -> bucket {sel.padded_m:4d} "
-            f"(tile {sel.strategy.l1}, backend {sel.backend}, "
-            f"select {sel_us:.1f}us via {path}, max|err|={err:.1e})"
-        )
+    with vortex.use(eng):
+        for m in (5, 62, 128, 200, 381):
+            a = jnp.asarray(rng.normal(size=(m, wl.K)), jnp.float32)
+            t_sel = time.perf_counter()
+            sel = gemm.select(m)
+            sel_us = (time.perf_counter() - t_sel) * 1e6
+            path = "table" if sel.select_seconds == 0.0 else "argmin"
+            out = vortex.ops.gemm(a, b)
+            ref = np.asarray(a) @ np.asarray(b)
+            err = float(np.max(np.abs(np.asarray(out) - ref)))
+            print(
+                f" M={m:4d} -> bucket {sel.padded_m:4d} "
+                f"(tile {sel.strategy.l1}, backend {sel.backend}, "
+                f"select {sel_us:.1f}us via {path}, max|err|={err:.1e})"
+            )
 
-    print("\n== runtime: attention + conv through the same engine ==")
-    for s in (33, 67, 127):
-        q = jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32)
-        k = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
-        v = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
-        out = eng.attention(q, k, v)
-        err = float(np.max(np.abs(
-            np.asarray(out) - np.asarray(ref_attention(q, k, v, causal=True))
-        )))
-        print(f" attention seq={s:4d} -> max|err|={err:.1e}")
-    for bsz in (1, 3):
-        x = jnp.asarray(rng.normal(size=(bsz, 14, 14, 8)), jnp.float32)
-        w = jnp.asarray(rng.normal(size=(3, 3, 8, 16)), jnp.float32)
-        out = eng.conv2d(x, w)
-        err = float(np.max(np.abs(np.asarray(out) - np.asarray(
-            ref_conv2d(x, w, stride=1, padding="VALID")
-        ))))
-        print(f" conv2d batch={bsz} -> max|err|={err:.1e}")
+        print("\n== runtime: attention + conv through the same session ==")
+        for s in (33, 67, 127):
+            q = jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32)
+            k = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
+            v = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
+            out = vortex.ops.attention(q, k, v)
+            err = float(np.max(np.abs(
+                np.asarray(out)
+                - np.asarray(ref_attention(q, k, v, causal=True))
+            )))
+            print(f" attention seq={s:4d} -> max|err|={err:.1e}")
+        for bsz in (1, 3):
+            x = jnp.asarray(rng.normal(size=(bsz, 14, 14, 8)), jnp.float32)
+            w = jnp.asarray(rng.normal(size=(3, 3, 8, 16)), jnp.float32)
+            out = vortex.ops.conv2d(x, w)
+            err = float(np.max(np.abs(np.asarray(out) - np.asarray(
+                ref_conv2d(x, w, stride=1, padding="VALID")
+            ))))
+            print(f" conv2d batch={bsz} -> max|err|={err:.1e}")
 
     print("\n== engine stats (one cache hierarchy across workloads) ==")
     for kind, s in eng.stats().items():

@@ -28,8 +28,7 @@ from repro.core.cost_model import (
 )
 from repro.core.engine import (
     OfflineStats,
-    VortexEngine,
-    VortexGemm,
+    PrecompileError,
     VortexKernel,
 )
 from repro.core.hardware import HOST_CPU, TPU_V5E, HardwareSpec, get_hardware
@@ -58,4 +57,21 @@ from repro.core.workloads import (
     register_workload,
 )
 
-__all__ = [n for n in dir() if not n.startswith("_")]
+__all__ = [n for n in dir() if not n.startswith("_")] + [
+    "VortexEngine",
+    "VortexGemm",
+]
+
+_LAZY_SHIMS = ("VortexEngine", "VortexGemm")
+
+
+def __getattr__(name: str):
+    # Deprecation shims resolve lazily (PEP 562) so `import repro.core`
+    # never pulls repro.vortex — the vortex package imports core modules,
+    # and an eager re-export here would re-create that cycle at import
+    # time.  `from repro.core import VortexEngine` still works.
+    if name in _LAZY_SHIMS:
+        from repro.core import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,4 +1,4 @@
-"""VortexEngine: the end-to-end sample-free compiler (paper Fig. 6).
+"""VortexKernel: the end-to-end sample-free compiler (paper Fig. 6).
 
 Offline stage (no shape samples anywhere):
   1. top-down: describe the workload as an rKernel program (workloads.py
@@ -15,12 +15,13 @@ Runtime stage:
   5. construct/fetch the executable for the induced bucket and run (skipping
      pad/unpad entirely when the extent is already bucket-aligned).
 
-The engine is workload-generic: :class:`VortexKernel` drives ANY registered
+:class:`VortexKernel` drives ANY registered
 :class:`~repro.core.workloads.Workload` through the same lattice → analyzer →
-selector → bucketed-executable pipeline, and :class:`VortexEngine` serves
-``gemm``, ``attention`` and ``conv2d`` entry points from one workload
-registry, one scored-lattice cache and one bucketed executable cache per
-signature.
+selector → bucketed-executable pipeline.  The multi-workload session layer —
+one engine serving every registered kind from one scored-lattice cache and
+one dispatch table — lives in :mod:`repro.vortex` (the public API);
+``VortexEngine``/``VortexGemm`` remain importable from here as deprecation
+shims over that package.
 
 Execution backends:
   * ``xla``    — flat JAX ops on the bucket shape (host-CPU execution in
@@ -39,24 +40,19 @@ from typing import Callable
 
 import jax
 
-from repro.core.analyzer import (
-    HybridAnalyzer,
-    Profiler,
-    ScoredLattice,
-    TableProfiler,
-    WallClockProfiler,
-)
+from repro.core.analyzer import HybridAnalyzer, Profiler, ScoredLattice
 from repro.core.candidates import generate_lattice
-from repro.core.hardware import HardwareSpec, get_hardware
+from repro.core.hardware import HardwareSpec
 from repro.core.selector import RuntimeSelector, Selection
-from repro.core.workloads import (
-    AttentionWorkload,
-    Conv2dWorkload,
-    GemmWorkload,
-    Workload,
-)
+from repro.core.workloads import Workload
 
-__all__ = ["OfflineStats", "VortexKernel", "VortexGemm", "VortexEngine"]
+__all__ = [
+    "OfflineStats",
+    "PrecompileError",
+    "VortexKernel",
+    "VortexGemm",
+    "VortexEngine",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +63,25 @@ class OfflineStats:
     num_measured: int
     build_seconds: float
     backends: tuple[str, ...]
+
+
+class PrecompileError(RuntimeError):
+    """A bucket failed to compile during :meth:`VortexKernel.precompile`.
+
+    Parallel precompiles surface through ``as_completed`` futures, which
+    would otherwise raise the bare builder exception with no hint of WHICH
+    bucket died; this wrapper names the failing Selection so a fleet-wide
+    warmup failure is diagnosable from the message alone.
+    """
+
+    def __init__(self, kind: str, sel: Selection, cause: BaseException):
+        self.kind = kind
+        self.selection = sel
+        super().__init__(
+            f"precompile failed for workload {kind!r}: bucket={sel.bucket} "
+            f"backend={sel.backend} strategy l1={sel.strategy.l1} "
+            f"grid={sel.grid}: {type(cause).__name__}: {cause}"
+        )
 
 
 @dataclasses.dataclass
@@ -85,6 +100,10 @@ class VortexKernel:
     ``scored_cache``), the runtime selector and the bucketed executable
     cache.  This is the unit the paper evaluates (BERT GEMMs with
     M = batch*seq; attention/conv ride the same machinery).
+
+    ``table_m_max``/``table_extend_limit`` size the selector's offline
+    selection table (see selector.py); they are what
+    :class:`repro.vortex.EngineConfig` threads through.
     """
 
     def __init__(
@@ -98,6 +117,8 @@ class VortexKernel:
         impl: str = "xla",
         interpret: bool = True,
         scored_cache: dict | None = None,
+        table_m_max: int = 4096,
+        table_extend_limit: int = 1 << 17,
     ):
         self._hw = hw
         self._wl = wl
@@ -125,7 +146,10 @@ class VortexKernel:
             scored[backend] = sl
             if scored_cache is not None:
                 scored_cache[cache_key] = sl
-        self.selector = RuntimeSelector(hw, wl, scored, num_cores=num_cores)
+        self.selector = RuntimeSelector(
+            hw, wl, scored, num_cores=num_cores,
+            table_m_max=table_m_max, table_extend_limit=table_extend_limit,
+        )
         self.offline_stats = OfflineStats(
             num_candidates=n_cands,
             num_measured=n_meas,
@@ -183,6 +207,9 @@ class VortexKernel:
 
         Missing buckets compile on a thread pool (XLA compilation releases
         the GIL); ``max_workers`` caps it, defaulting to min(8, cpu count).
+        A failing bucket raises :class:`PrecompileError` naming the failing
+        Selection — after every other bucket has drained and registered, so
+        a retry after fixing the bad bucket recompiles nothing else.
         """
         sels = self.selector.selections_upto(m_max)
         pending: dict[tuple, Selection] = {}
@@ -195,18 +222,36 @@ class VortexKernel:
                 max_workers or 8, os.cpu_count() or 1, len(pending)
             )
             if workers > 1:
-                # Register each entry as it completes: one failing compile
-                # must not discard the buckets that already built.
+                # Drain ALL futures, registering each success as it
+                # completes, and only then raise for the first failure:
+                # raising mid-drain would block in the executor's shutdown
+                # anyway (no cancel) while discarding every in-flight build
+                # that finishes after the failure — a retry would recompile
+                # buckets that had already built fine.
+                failed: tuple[Selection, Exception] | None = None
                 with ThreadPoolExecutor(max_workers=workers) as pool:
                     futures = {
                         pool.submit(self._build_executable, sel, args): key
                         for key, sel in pending.items()
                     }
                     for fut in as_completed(futures):
-                        self._exec_cache[futures[fut]] = fut.result()
+                        key = futures[fut]
+                        try:
+                            self._exec_cache[key] = fut.result()
+                        except Exception as e:
+                            if failed is None:
+                                failed = (pending[key], e)
+                if failed is not None:
+                    sel, e = failed
+                    raise PrecompileError(self._wl.kind, sel, e) from e
             else:
                 for key, sel in pending.items():
-                    self._exec_cache[key] = self._build_executable(sel, args)
+                    try:
+                        self._exec_cache[key] = self._build_executable(
+                            sel, args
+                        )
+                    except Exception as e:
+                        raise PrecompileError(self._wl.kind, sel, e) from e
         return len(sels)
 
     def __call__(self, *args) -> jax.Array:
@@ -251,184 +296,13 @@ class VortexKernel:
         }
 
 
-class VortexGemm(VortexKernel):
-    """One dynamic-shape GEMM workload, compiled sample-free.
+def __getattr__(name: str):
+    # Deprecation shims live with the public API (repro.vortex.compat) but
+    # stay importable from their historical home; the import is deferred so
+    # repro.core never pulls repro.vortex at module-import time (the vortex
+    # package imports this module).
+    if name in ("VortexEngine", "VortexGemm"):
+        from repro.vortex import compat
 
-    N and K are static (weights side); M is dynamic.  Kept as a named class
-    for the GEMM-only callers (serving, benchmarks); it is exactly
-    :class:`VortexKernel` over a :class:`GemmWorkload`.
-    """
-
-
-class VortexEngine:
-    """Engine over many workloads: one VortexKernel per workload signature.
-
-    Model layers request ops through :meth:`gemm` / :meth:`attention` /
-    :meth:`conv2d`; signatures are built lazily but *without* any dependence
-    on the dynamic dim — first use of a new signature builds its lattice
-    once, after which every runtime extent is served from the same scored
-    lattice (sample-free across all dynamic shapes).  Workloads whose
-    lattice inputs coincide (e.g. attention signatures differing only in
-    masking flags) share scored lattices through one engine-wide cache.
-    """
-
-    def __init__(
-        self,
-        hardware: str = "host_cpu",
-        profiler: Profiler | None = None,
-        empirical_levels: tuple[int, ...] | None = None,
-        backends: tuple[str, ...] | None = None,
-        impl: str = "xla",
-        num_cores: int = 1,
-        interpret: bool = True,
-    ):
-        self._hw = get_hardware(hardware)
-        if profiler is None:
-            profiler = (
-                WallClockProfiler() if hardware == "host_cpu"
-                else TableProfiler(self._hw)
-            )
-        if empirical_levels is None:
-            # Paper defaults (Table 7): E:L0 on CPU; E:L0,L1 on GPU-class HW.
-            empirical_levels = (0,) if hardware == "host_cpu" else (0, 1)
-        self._profiler = profiler
-        self._empirical_levels = tuple(empirical_levels)
-        self._backends = backends
-        self._impl = impl
-        self._num_cores = num_cores
-        self._interpret = interpret
-        self._kernels: dict[tuple, VortexKernel] = {}
-        self._scored_cache: dict[tuple, ScoredLattice] = {}
-        # Zero-rebuild hot path: raw call-site tuples -> compiled kernel.
-        # Steady-state gemm/attention/conv2d calls hash a tuple of ints
-        # (shapes/flags straight off the arrays) instead of constructing a
-        # Workload dataclass and hashing its signature on every call.
-        self._dispatch: dict[tuple, VortexKernel] = {}
-
-    # -- workload plumbing --------------------------------------------------
-
-    def kernel_for(self, wl: Workload) -> VortexKernel:
-        """The compiled kernel serving ``wl``'s signature (built lazily)."""
-        key = wl.signature
-        if key not in self._kernels:
-            self._kernels[key] = VortexKernel(
-                self._hw,
-                wl,
-                profiler=self._profiler,
-                empirical_levels=self._empirical_levels,
-                backends=self._backends,
-                num_cores=self._num_cores,
-                impl=self._impl,
-                interpret=self._interpret,
-                scored_cache=self._scored_cache,
-            )
-        return self._kernels[key]
-
-    def gemm_for(self, n: int, k: int) -> VortexKernel:
-        return self.kernel_for(GemmWorkload(M=None, N=n, K=k))
-
-    def _kernel_at(self, key: tuple, make_wl) -> VortexKernel:
-        """Raw-tuple hot-path lookup: the Workload is only constructed (and
-        its dataclass signature only hashed) on the first call per key."""
-        kern = self._dispatch.get(key)
-        if kern is None:
-            kern = self.kernel_for(make_wl())
-            self._dispatch[key] = kern
-        return kern
-
-    # -- entry points -------------------------------------------------------
-
-    def gemm(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        """C[M,N] = A[M,K] @ B[K,N] with dynamic M."""
-        return self._kernel_at(
-            ("gemm", b.shape[0], b.shape[1]),
-            lambda: GemmWorkload(M=None, N=b.shape[1], K=b.shape[0]),
-        )(a, b)
-
-    def attention(
-        self,
-        q: jax.Array,
-        k: jax.Array,
-        v: jax.Array,
-        *,
-        causal: bool = True,
-        window: int | None = None,
-        softcap: float | None = None,
-    ) -> jax.Array:
-        """Flash attention with dynamic sequence length.
-
-        q: (batch, q_heads, seq, head_dim); k, v: (batch, kv_heads, seq,
-        head_dim) with q_heads % kv_heads == 0 (GQA).  Requires causal=True
-        (padding correctness comes from the causal mask; see workloads.py).
-        """
-        return self._kernel_at(
-            ("attention", q.shape[-1], causal, window, softcap),
-            lambda: AttentionWorkload(
-                seq=None, head_dim=q.shape[-1], causal=causal,
-                window=window, softcap=softcap,
-            ),
-        )(q, k, v)
-
-    def conv2d(
-        self, x: jax.Array, w: jax.Array, *, stride: int = 1
-    ) -> jax.Array:
-        """Conv2D (VALID): x (b, h, w, cin); w (kh, kw, cin, cout)."""
-        kh, kw, cin, cout = w.shape
-        return self._kernel_at(
-            ("conv2d", kh, kw, cin, cout, stride),
-            lambda: Conv2dWorkload(
-                m=None, cin=cin, cout=cout, kh=kh, kw=kw, stride=stride
-            ),
-        )(x, w)
-
-    # -- introspection ------------------------------------------------------
-
-    def precompile(self, wl: Workload, m_max: int, *args) -> int:
-        """Precompile all buckets of ``wl`` reachable up to ``m_max``.
-        Pass representative call ``args`` for workloads with outer-dim
-        executable specialization (attention: any q/k/v with the serving
-        batch/head layout)."""
-        return self.kernel_for(wl).precompile(m_max, *args)
-
-    def offline_stats(self) -> OfflineStats:
-        stats = [k.offline_stats for k in self._kernels.values()]
-        return OfflineStats(
-            num_candidates=sum(s.num_candidates for s in stats),
-            num_measured=sum(s.num_measured for s in stats),
-            build_seconds=sum(s.build_seconds for s in stats),
-            backends=stats[0].backends if stats else (),
-        )
-
-    def stats(self) -> dict[str, dict]:
-        """Per-workload-kind serving stats: selection overhead and executable
-        cache behaviour (what benchmarks/bench_workloads.py reports)."""
-        out: dict[str, dict] = {}
-        for kernel in self._kernels.values():
-            kind = kernel.workload.kind
-            agg = out.setdefault(
-                kind,
-                {
-                    "signatures": 0, "selects": 0, "select_table_hits": 0,
-                    "select_lru_hits": 0, "select_argmin_misses": 0,
-                    "select_cache_hits": 0, "select_us_sum": 0.0,
-                    "table_entries": 0, "table_build_s": 0.0,
-                    "exec_entries": 0, "exec_hits": 0,
-                    "compile_seconds": 0.0,
-                },
-            )
-            sstats = kernel.selector.stats
-            cinfo = kernel.cache_info
-            table = kernel.selector.table_if_built
-            agg["signatures"] += 1
-            agg["selects"] += sstats.selects
-            agg["select_table_hits"] += sstats.table_hits
-            agg["select_lru_hits"] += sstats.lru_hits
-            agg["select_argmin_misses"] += sstats.argmin_misses
-            agg["select_cache_hits"] += sstats.cache_hits
-            agg["select_us_sum"] += sstats.select_seconds * 1e6
-            agg["table_entries"] += len(table) if table is not None else 0
-            agg["table_build_s"] += sstats.table_build_seconds
-            agg["exec_entries"] += cinfo["entries"]
-            agg["exec_hits"] += cinfo["hits"]
-            agg["compile_seconds"] += cinfo["compile_seconds"]
-        return out
+        return getattr(compat, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

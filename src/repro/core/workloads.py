@@ -133,6 +133,31 @@ class Workload:
     # uses this to enumerate grid breakpoints sample-free (buckets_upto).
     dynamic_tile_axes: ClassVar[tuple[int, ...]] = (0,)
 
+    # ---- call-site binding (registry-driven ops) --------------------------
+    # These two classmethods are what makes ``repro.vortex.ops.<kind>``
+    # work with no engine edits: the engine resolves a call site entirely
+    # through the registry — ``dispatch_key`` gives the raw-tuple hot-path
+    # key (ints/flags straight off the arrays, no dataclass construction),
+    # ``bind`` constructs the Workload instance on the first call per key.
+
+    @classmethod
+    def bind(cls, *args: Any, **kwargs: Any) -> "Workload":
+        """Construct the workload instance implied by a call site: runtime
+        arrays in ``args`` (what the executable consumes), workload
+        parameters in ``kwargs`` (masking flags, strides, ...)."""
+        raise NotImplementedError(
+            f"{cls.__name__} does not define bind(); it cannot be called "
+            "through vortex.ops — use vortex.compile(workload) with an "
+            "explicit instance instead"
+        )
+
+    @classmethod
+    def dispatch_key(cls, *args: Any, **kwargs: Any) -> tuple | None:
+        """Cheap hashable key identifying the call-site signature (the
+        static dims/flags, NOT the dynamic extent).  Returning None opts
+        out of the raw-tuple dispatch cache: every call pays bind()."""
+        return None
+
     # ---- identity --------------------------------------------------------
 
     @property
@@ -278,6 +303,14 @@ class GemmWorkload(Workload):
     kind: ClassVar[str] = "gemm"
     prepare_is_pad_only: ClassVar[bool] = True
 
+    @classmethod
+    def bind(cls, a, b) -> "GemmWorkload":
+        return cls(M=None, N=b.shape[1], K=b.shape[0])
+
+    @classmethod
+    def dispatch_key(cls, a, b) -> tuple:
+        return (b.shape[0], b.shape[1])
+
     def runtime_dims(self, m_runtime: int | None = None) -> Tile:
         m = self.M if m_runtime is None else m_runtime
         assert m is not None, "runtime M required for dynamic workloads"
@@ -406,6 +439,23 @@ class AttentionWorkload(Workload):
                 "engine-routed attention requires causal=True: zero-padded "
                 "key positions are only masked by the causal structure"
             )
+
+    @classmethod
+    def bind(
+        cls, q, k, v, *, causal: bool = True,
+        window: int | None = None, softcap: float | None = None,
+    ) -> "AttentionWorkload":
+        return cls(
+            seq=None, head_dim=q.shape[-1], causal=causal,
+            window=window, softcap=softcap,
+        )
+
+    @classmethod
+    def dispatch_key(
+        cls, q, k, v, *, causal: bool = True,
+        window: int | None = None, softcap: float | None = None,
+    ) -> tuple:
+        return (q.shape[-1], causal, window, softcap)
 
     @property
     def lattice_key(self) -> tuple:
@@ -565,6 +615,16 @@ class Conv2dWorkload(Workload):
     dynamic_dims: tuple[str, ...] = ("m",)
 
     kind: ClassVar[str] = "conv2d"
+
+    @classmethod
+    def bind(cls, x, w, *, stride: int = 1) -> "Conv2dWorkload":
+        kh, kw, cin, cout = w.shape
+        return cls(m=None, cin=cin, cout=cout, kh=kh, kw=kw, stride=stride)
+
+    @classmethod
+    def dispatch_key(cls, x, w, *, stride: int = 1) -> tuple:
+        kh, kw, cin, cout = w.shape
+        return (kh, kw, cin, cout, stride)
 
     @property
     def N(self) -> int:

@@ -2,11 +2,24 @@
 
 Requests arrive with arbitrary batch sizes and prompt lengths.  XLA needs
 static shapes, so every distinct (batch, prompt_len) would recompile.  The
-Vortex runtime selector (core/selector.py) instead pads each request up to
-the nearest *lattice bucket* — the sample-free bucket set derived offline
-from hardware limits — so the executable cache stays small and padding
-waste is bounded by the lattice spacing (paper Fig. 8 argument applied at
-the serving layer).
+server quantizes both dims through the vortex engine session it owns:
+
+  * the sequence dim is bucketed by the engine's own selection machinery —
+    ``CompiledOp.bucket`` over the model's GEMM signature, i.e. the SAME
+    lattice breakpoints the runtime selector bisects (there is no second,
+    hand-rolled bucketing scheme in the tree);
+  * the request batch dim (an auxiliary outer multiplier) is pow2-bucketed
+    (``vortex.pow2_bucket``).
+
+Prefill executables are AOT-compiled per bucket through ONE jit function
+(``jit(...).lower(...).compile()``), so ``stats["prefill_compiles"]``
+counts real XLA compilations — not per-shape Python wrappers around a jit
+that retraces anyway.  Lowering runs under ``engine.use()``: causal
+prefill attention inside the model dispatches through the engine session,
+so the compiled programs embed lattice-selected attention blocks.
+``warmup()`` AOT-compiles the per-bucket prefill programs (warming the
+engine's attention executables through the session) before traffic
+arrives.
 
 ``python -m repro.launch.serve --arch paper-gpt2-124m --smoke --requests 16``
 """
@@ -20,13 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GemmWorkload, VortexGemm, get_hardware
+from repro.core import GemmWorkload
 from repro.launch.mesh import make_host_mesh
-from repro.models import model as M
 from repro.models.params import init_params
 from repro.models.partitioning import make_rules
 from repro.models.registry import get_config, get_smoke_config
 from repro.train.step import make_decode_step, make_prefill_step
+from repro.vortex import CompiledOp, Engine, EngineConfig, pow2_bucket
 
 __all__ = ["VortexServer", "Request"]
 
@@ -41,64 +54,82 @@ class VortexServer:
     """Batched LM serving with Vortex-bucketed dynamic shapes.
 
     The dynamic dims are the request batch size and the prompt length; both
-    are padded to Vortex lattice buckets before hitting the compiled
-    prefill/decode executables.
+    are padded to buckets before hitting the compiled prefill/decode
+    executables.  The server owns (or is handed) an :class:`Engine`
+    session; its sequence buckets are the engine's selection buckets.
     """
 
-    def __init__(self, cfg, mesh, *, max_cache: int = 512, seed: int = 0):
+    def __init__(
+        self,
+        cfg,
+        mesh,
+        *,
+        max_cache: int = 512,
+        seed: int = 0,
+        engine: Engine | None = None,
+    ):
         self.cfg = cfg
         self.rules = make_rules(
             mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads
         )
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         self.max_cache = max_cache
-        # Vortex engine over the token dim: N/K from the model's GEMM
-        # signature; the selector's M-buckets become our batch/seq buckets.
-        # The lattice is built for the TARGET hardware (TPU v5e): its native
-        # sublane granularity (16) is what quantizes the bucket set — on the
-        # CPU host the same buckets are used so executables dedupe the same
-        # way they would on the pod.
-        hw = get_hardware("tpu_v5e")
-        wl = GemmWorkload(M=None, N=cfg.d_model, K=cfg.d_model)
-        self._vortex = VortexGemm(hw, wl, backends=("mxu",))
-        self._prefill = {}
+        if engine is None:
+            # The lattice is built for the TARGET hardware (TPU v5e): its
+            # native sublane granularity (16) is what quantizes the bucket
+            # set — on the CPU host the same buckets are used so
+            # executables dedupe the same way they would on the pod.
+            engine = Engine(EngineConfig(hardware="tpu_v5e", backends=("mxu",)))
+        self.engine = engine
+        # The token dim's bucket source: the model's GEMM signature
+        # (N/K = d_model); the selector's M-buckets become our seq buckets.
+        # Built via kernel_for, not engine.compile: this handle only ever
+        # does bucket arithmetic (select/bucket/buckets), so the engine's
+        # eager-precompile policy (precompile_m_max) must not fire for it —
+        # the executables would never be dispatched.
+        self._seq_op = CompiledOp(engine, engine.kernel_for(
+            GemmWorkload(M=None, N=cfg.d_model, K=cfg.d_model)
+        ))
+        # ONE jit for prefill; buckets are AOT lowered+compiled through it,
+        # so each bucket pays exactly one real compilation and the stats
+        # count compilations, not wrapper constructions.
+        self._prefill_jit = jax.jit(
+            make_prefill_step(cfg, self.rules, max_cache)
+        )
+        self._prefill_exec: dict[tuple[int, int], jax.stages.Compiled] = {}
         self._decode = jax.jit(
             make_decode_step(cfg, self.rules, cache_len=max_cache)
         )
         self.stats = {"prefill_compiles": 0, "bucket_hits": 0}
 
-    def _bucket(self, n: int) -> int:
-        """Vortex-selected padded size for the sequence extent."""
-        return self._vortex.select(max(n, 1)).padded_m
+    # -- engine-owned bucketing ---------------------------------------------
+
+    def seq_bucket(self, s: int) -> int:
+        """The engine-selected padded size for a prompt length (capped by
+        the cache length)."""
+        return min(self._seq_op.bucket(s), self.max_cache)
 
     @staticmethod
-    def _batch_bucket(b: int) -> int:
-        """Batch buckets are powers of two: the batch dim multiplies every
-        GEMM's M jointly with seq, so quantizing it to the MXU sublane
-        granularity would double-pad; pow2 keeps the executable cache small
-        with <=2x waste on the batch factor alone."""
-        p = 1
-        while p < b:
-            p *= 2
-        return p
+    def batch_bucket(b: int) -> int:
+        """Pow2 bucket for the request batch dim (see vortex.pow2_bucket:
+        an auxiliary multiplier of the token dim, deliberately NOT lattice
+        quantized — that would double-pad)."""
+        return pow2_bucket(b)
 
-    def _prefill_fn(self, b: int, s: int):
-        key = (b, s)
-        if key not in self._prefill:
-            self._prefill[key] = jax.jit(
-                make_prefill_step(self.cfg, self.rules, self.max_cache)
-            )
-            self.stats["prefill_compiles"] += 1
-        else:
-            self.stats["bucket_hits"] += 1
-        return self._prefill[key]
+    def seq_buckets(self, m_max: int | None = None) -> list[int]:
+        """Every sequence bucket this server can emit — the engine's own
+        reachable-bucket set, capped by the cache length."""
+        m_max = self.max_cache if m_max is None else min(m_max, self.max_cache)
+        return sorted({min(b, self.max_cache)
+                       for b in self._seq_op.buckets(m_max)})
 
-    def generate(self, req: Request) -> np.ndarray:
-        b, s = req.tokens.shape
-        bp = self._batch_bucket(b)
-        sp = min(self._bucket(s), self.max_cache)
+    # -- compiled-program cache ---------------------------------------------
+
+    def _make_batch(self, bp: int, sp: int, tokens: np.ndarray | None = None):
         toks = np.zeros((bp, sp), np.int32)
-        toks[:b, :s] = req.tokens
+        if tokens is not None:
+            b, s = tokens.shape
+            toks[:b, :s] = tokens
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.vision_prefix:
             batch["vision_embeds"] = jnp.zeros(
@@ -110,7 +141,59 @@ class VortexServer:
                 (bp, self.cfg.encoder_seq, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype),
             )
-        logits, cache = self._prefill_fn(bp, sp)(self.params, batch)
+        return batch
+
+    def _prefill_exec_for(self, bp: int, sp: int, batch) -> "jax.stages.Compiled":
+        key = (bp, sp)
+        exe = self._prefill_exec.get(key)
+        if exe is None:
+            # Lower under the engine session: causal prefill attention
+            # inside the model dispatches through the engine
+            # (models/layers.attn_forward consults installed_engine()), so
+            # the traced program embeds lattice-selected attention blocks
+            # and the engine's executable cache is warmed at trace time.
+            with self.engine.use():
+                exe = self._prefill_jit.lower(self.params, batch).compile()
+            self._prefill_exec[key] = exe
+            self.stats["prefill_compiles"] += 1
+        else:
+            self.stats["bucket_hits"] += 1
+        return exe
+
+    def warmup(self, *, max_batch: int = 1, m_max: int | None = None) -> int:
+        """Precompile before traffic: AOT compile the prefill program for
+        every (batch-bucket, seq-bucket) pair up to ``max_batch``/``m_max``.
+        The bucket set is the engine's own (CompiledOp.buckets), and each
+        AOT compile warms the engine's attention executables through the
+        session (see _prefill_exec_for) — ``generate`` pads every prompt to
+        one of these buckets first, so this covers exactly the executables
+        serving will hit.  Returns the number of prefill programs compiled.
+
+        Direct-op serving (no model in between) warms with
+        ``CompiledOp.precompile`` instead — see DESIGN.md §6."""
+        m_max = self.max_cache if m_max is None else min(m_max, self.max_cache)
+        compiled = 0
+        bp = 1
+        while True:
+            for sp in self.seq_buckets(m_max):
+                if (bp, sp) not in self._prefill_exec:
+                    self._prefill_exec_for(bp, sp, self._make_batch(bp, sp))
+                    compiled += 1
+            if bp >= pow2_bucket(max_batch):
+                break
+            bp *= 2
+        return compiled
+
+    # -- serving ------------------------------------------------------------
+
+    def generate(self, req: Request) -> np.ndarray:
+        b, s = req.tokens.shape
+        bp = self.batch_bucket(b)
+        sp = self.seq_bucket(s)
+        batch = self._make_batch(bp, sp, req.tokens)
+        logits, cache = self._prefill_exec_for(bp, sp, batch)(
+            self.params, batch
+        )
         out = [np.asarray(jnp.argmax(logits, -1))]
         tok = jnp.asarray(out[-1][:, None])
         pos = s - 1
@@ -132,11 +215,18 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--warmup", action="store_true",
+        help="AOT-precompile every bucket before serving",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_host_mesh()
     server = VortexServer(cfg, mesh, max_cache=256)
+    if args.warmup:
+        n = server.warmup(max_batch=8, m_max=64)
+        print(f"warmup: {n} prefill buckets AOT-compiled")
     rng = np.random.default_rng(args.seed)
 
     t0 = time.perf_counter()

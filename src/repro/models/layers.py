@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.kernels.ref import chunked_attention, ref_attention
 from repro.models.config import LayerSpec, ModelConfig
 from repro.models.partitioning import AxisRules, constrain
+from repro.vortex import _deprecation, session
 
 __all__ = [
     "rmsnorm",
@@ -46,43 +47,58 @@ __all__ = [
 # Vortex autoconfig (core/autoconfig.py picks it from the cost model).
 ATTN_CHUNK = 1024
 
-# Optional VortexEngine (core/engine.py) routing for the prefill attention
-# path: when a serving harness installs an engine, causal self-attention at
-# dynamic sequence lengths dispatches through the sample-free bucketed
-# pipeline instead of the inline chunked scan.  The steady-state dispatch is
-# constant time: the engine resolves the call site from a raw shape tuple
-# and the selector serves unseen sequence lengths from the
-# offline-materialized breakpoint table (core/selection_table.py), so a
-# high-cardinality stream of prefill lengths costs a bisect per call — no
-# per-call workload construction, no argmin.  None keeps the inline path
-# (training, sharded runs, and every existing caller are unaffected).
-_ATTN_ENGINE = None
+# Optional vortex-engine routing for the prefill attention path: when a
+# serving harness installs an Engine session (`with vortex.use(engine):`),
+# causal self-attention at dynamic sequence lengths dispatches through the
+# sample-free bucketed pipeline instead of the inline chunked scan.  The
+# steady-state dispatch is constant time: the engine resolves the call site
+# from a raw shape tuple (Workload.dispatch_key) and the selector serves
+# unseen sequence lengths from the offline-materialized breakpoint table
+# (core/selection_table.py), so a high-cardinality stream of prefill
+# lengths costs a bisect per call — no per-call workload construction, no
+# argmin.  The installation is contextvar-scoped (repro/vortex/session.py):
+# nestable, exception-safe, thread-isolated; no session installed keeps the
+# inline path (training, sharded runs, and every existing caller are
+# unaffected — the lazily-created *default* engine never reroutes layers).
+#
+# set_attention_engine / get_attention_engine / attention_engine are the
+# deprecated pre-session surface; they delegate to the contextvar.
 
 
 def set_attention_engine(engine):
-    """Install (or clear, with None) the VortexEngine used by
-    :func:`attn_forward` for causal prefill attention.  Returns the
-    previously-installed engine so callers can restore it."""
-    global _ATTN_ENGINE
-    prev = _ATTN_ENGINE
-    _ATTN_ENGINE = engine
-    return prev
+    """Deprecated: install (or clear, with None) the engine used by
+    :func:`attn_forward` for causal prefill attention; returns the previous
+    one.  Use ``vortex.use(engine)`` — scoped, exception-safe, and local to
+    the calling thread (this shim shares its semantics: it no longer
+    mutates other threads' routing)."""
+    _deprecation.warn_deprecated(
+        "models.layers.set_attention_engine",
+        "repro.vortex.use(engine) — NOTE the shim now writes the "
+        "context/thread-LOCAL session (no longer a process-wide global): "
+        "multi-threaded harnesses must install per serving thread",
+    )
+    return session.install(engine)
 
 
 def get_attention_engine():
-    return _ATTN_ENGINE
+    """Deprecated: the engine :func:`attn_forward` currently routes
+    through, or None.  Use ``repro.vortex.installed_engine()``."""
+    _deprecation.warn_deprecated(
+        "models.layers.get_attention_engine",
+        "repro.vortex.installed_engine()",
+    )
+    return session.installed_engine()
 
 
 @contextlib.contextmanager
 def attention_engine(engine):
-    """Scoped engine install: route prefill attention through ``engine``
-    inside the block, restoring the previous routing on exit (exception
-    safe — what serving harnesses and tests should use)."""
-    prev = set_attention_engine(engine)
-    try:
+    """Deprecated: scoped engine install.  Use ``vortex.use(engine)`` —
+    identical semantics (this shim delegates to it)."""
+    _deprecation.warn_deprecated(
+        "models.layers.attention_engine", "repro.vortex.use(engine)"
+    )
+    with session.use(engine):
         yield engine
-    finally:
-        set_attention_engine(prev)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -359,12 +375,14 @@ def attn_forward(
             )
         new_cache = {"k": k_cache, "v": v_cache}
     else:
-        if _ATTN_ENGINE is not None and causal and mode == "prefill":
-            # Dynamic-seq serving path: the engine selects (block_q, block_k)
-            # from the scored lattice for this runtime seq, pads to the
-            # induced bucket, and serves from the bounded executable cache.
-            out = _ATTN_ENGINE.attention(
-                q, k, v, causal=True, window=spec.window,
+        engine = session.installed_engine()
+        if engine is not None and causal and mode == "prefill":
+            # Dynamic-seq serving path: the session engine selects
+            # (block_q, block_k) from the scored lattice for this runtime
+            # seq, pads to the induced bucket, and serves from the bounded
+            # executable cache.
+            out = engine.dispatch(
+                "attention", q, k, v, causal=True, window=spec.window,
                 softcap=cfg.attn_softcap,
             )
         else:

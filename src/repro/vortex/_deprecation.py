@@ -1,0 +1,25 @@
+"""Repro-owned deprecation machinery.
+
+All shims in this codebase warn with :class:`VortexDeprecationWarning` (a
+``DeprecationWarning`` subclass) rather than the stdlib category directly,
+so CI can turn *our* deprecations into errors (tier-1 ``filterwarnings``)
+without also erroring on unrelated upstream deprecations from jax/numpy.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["VortexDeprecationWarning", "warn_deprecated"]
+
+
+class VortexDeprecationWarning(DeprecationWarning):
+    """A deprecated repro surface was used; migrate to ``repro.vortex``."""
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    warnings.warn(
+        f"{old} is deprecated and will be removed; use {new} instead "
+        "(see DESIGN.md § Public API for the migration)",
+        VortexDeprecationWarning,
+        stacklevel=stacklevel,
+    )

@@ -1,0 +1,58 @@
+"""EngineConfig: the one frozen value that fully describes an Engine.
+
+Everything an :class:`~repro.vortex.Engine` session needs — target
+hardware, compute backends, executable implementation, selection-table
+sizing, precompile policy — lives here, so engines are reproducible from a
+single hashable value and serving harnesses can log/compare them.  The
+profiler is the one deliberate exception (a live object measuring the host;
+pass it to ``Engine`` directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["EngineConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Frozen description of one engine session.
+
+    * ``hardware`` — a :func:`repro.core.hardware.get_hardware` name; the
+      lattice is generated for THIS target even when executing on a host
+      (serving uses ``tpu_v5e`` buckets on the CPU so executables dedupe
+      the same way they would on the pod).
+    * ``backends`` — compute backends to score (None = all the hardware
+      declares, e.g. MXU + VPU; the selector picks per shape, Fig. 16).
+    * ``impl`` — executable implementation: ``"xla"`` (flat JAX ops) or
+      ``"pallas"`` (Vortex-tiled kernels; ``interpret`` runs them off-TPU).
+    * ``empirical_levels`` — hierarchy levels the hybrid analyzer measures
+      empirically (None = paper defaults, Table 7: level 0 on CPU, levels
+      0-1 on accelerator-class hardware; ``()`` = fully analytical).
+    * ``table_m_max`` / ``table_extend_limit`` — initial coverage and
+      doubling ceiling of the offline-materialized selection table
+      (selection_table.py); 0 disables the table (argmin + LRU only).
+    * ``precompile_m_max`` — when > 0, compiling an op through this engine
+      eagerly warms every executable bucket reachable for extents up to
+      this value (only for workloads whose executables are not specialized
+      on outer dims — those need representative args, see
+      ``CompiledOp.precompile``).
+    """
+
+    hardware: str = "host_cpu"
+    backends: tuple[str, ...] | None = None
+    impl: str = "xla"
+    interpret: bool = True
+    num_cores: int = 1
+    empirical_levels: tuple[int, ...] | None = None
+    table_m_max: int = 4096
+    table_extend_limit: int = 1 << 17
+    precompile_m_max: int = 0
+
+    def __post_init__(self) -> None:
+        if self.backends is not None:
+            object.__setattr__(self, "backends", tuple(self.backends))
+        if self.empirical_levels is not None:
+            object.__setattr__(
+                self, "empirical_levels", tuple(self.empirical_levels)
+            )

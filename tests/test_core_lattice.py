@@ -13,7 +13,7 @@ from repro.core import (
     GemmWorkload,
     HOST_CPU,
     TPU_V5E,
-    VortexGemm,
+    VortexKernel,
 )
 from repro.core.analyzer import AnalyticalProfiler, HybridAnalyzer
 from repro.core.candidates import (
@@ -150,11 +150,11 @@ def test_selector_is_argmin(scored):
 
 
 def test_engine_numerics_and_bucketing():
-    """VortexGemm computes the right matmul for awkward dynamic M."""
+    """VortexKernel computes the right matmul for awkward dynamic M."""
     import jax.numpy as jnp
 
     wl = GemmWorkload(M=None, N=96, K=128)
-    eng = VortexGemm(HOST_CPU, wl, empirical_levels=())
+    eng = VortexKernel(HOST_CPU, wl, empirical_levels=())
     rng = np.random.default_rng(0)
     for m in (1, 5, 33, 100):
         a = jnp.asarray(rng.normal(size=(m, 128)), jnp.float32)
@@ -171,7 +171,7 @@ def test_backend_adaptation_prefers_vpu_for_tiny_m():
     """Fig. 16: for very small M the VPU (no MXU padding) should win at
     least sometimes; for large M the MXU must win."""
     wl = GemmWorkload(M=None, N=1024, K=1024)
-    eng = VortexGemm(TPU_V5E, wl, backends=("mxu", "vpu"))
+    eng = VortexKernel(TPU_V5E, wl, backends=("mxu", "vpu"))
     big = eng.select(4096)
     assert big.backend == "mxu"
     small = eng.select(1)

@@ -1,6 +1,7 @@
-"""Workload-generic pipeline end-to-end: VortexEngine.gemm/attention/conv2d
-must match the flat JAX references for prime (non-tile-aligned) dynamic
-sizes across execution backends, selection must be deterministic, and the
+"""Workload-generic pipeline end-to-end: registry-dispatched gemm /
+attention / conv2d (vortex.ops through an Engine session) must match the
+flat JAX references for prime (non-tile-aligned) dynamic sizes across
+execution backends, selection must be deterministic, and the
 bucketing/caching contracts must hold."""
 import numpy as np
 import pytest
@@ -13,9 +14,10 @@ from repro.core import (
     AttentionWorkload,
     Conv2dWorkload,
     GemmWorkload,
-    VortexEngine,
     WORKLOADS,
 )
+from repro import vortex
+from repro.vortex import Engine
 from repro.core.analyzer import AnalyticalProfiler, HybridAnalyzer
 from repro.core.candidates import generate_lattice
 from repro.core.selector import RuntimeSelector
@@ -32,7 +34,7 @@ def _arr(shape):
 def engine(request):
     # pallas runs in interpret mode on this host; empirical_levels=() keeps
     # the offline stage fast and deterministic.
-    return VortexEngine(
+    return Engine(
         "host_cpu", empirical_levels=(), impl=request.param, interpret=True
     )
 
@@ -46,7 +48,7 @@ def engine(request):
 def test_gemm_matches_reference(engine, m):
     a, b = _arr((m, 96)), _arr((96, 80))
     np.testing.assert_allclose(
-        np.asarray(engine.gemm(a, b)), np.asarray(ref_gemm(a, b)),
+        np.asarray(engine.dispatch("gemm", a, b)), np.asarray(ref_gemm(a, b)),
         rtol=1e-4, atol=1e-4,
     )
 
@@ -56,7 +58,7 @@ def test_attention_matches_reference(engine, seq):
     q = _arr((2, 4, seq, 32))
     k = _arr((2, 2, seq, 32))  # GQA: 2 query heads per kv head
     v = _arr((2, 2, seq, 32))
-    out = engine.attention(q, k, v)
+    out = engine.dispatch("attention", q, k, v)
     ref = ref_attention(q, k, v, causal=True)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4
@@ -65,7 +67,7 @@ def test_attention_matches_reference(engine, seq):
 
 def test_attention_window_matches_reference(engine):
     q = k = v = _arr((1, 2, 53, 32))
-    out = engine.attention(q, k, v, window=16)
+    out = engine.dispatch("attention", q, k, v, window=16)
     ref = ref_attention(q, k, v, causal=True, window=16)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4
@@ -76,7 +78,7 @@ def test_attention_window_matches_reference(engine):
 def test_conv2d_matches_reference(engine, batch, hw_px):
     x = _arr((batch, hw_px, hw_px, 5))
     w = _arr((3, 3, 5, 7))
-    out = engine.conv2d(x, w)
+    out = engine.dispatch("conv2d", x, w)
     ref = ref_conv2d(x, w, stride=1, padding="VALID")
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4
@@ -84,10 +86,10 @@ def test_conv2d_matches_reference(engine, batch, hw_px):
 
 
 def test_non_causal_attention_rejected():
-    eng = VortexEngine("host_cpu", empirical_levels=())
+    eng = Engine("host_cpu", empirical_levels=())
     q = k = v = _arr((1, 1, 8, 32))
     with pytest.raises(NotImplementedError):
-        eng.attention(q, k, v, causal=False)
+        eng.dispatch("attention", q, k, v, causal=False)
 
 
 # ---------------------------------------------------------------------------
@@ -100,11 +102,11 @@ def test_registry_serves_all_kinds():
 
 
 def test_one_kernel_per_signature_and_shared_lattice():
-    eng = VortexEngine("host_cpu", empirical_levels=())
+    eng = Engine("host_cpu", empirical_levels=())
     q = _arr((1, 2, 13, 32))
     k = v = _arr((1, 2, 13, 32))
-    eng.attention(q, k, v)
-    eng.attention(q, k, v, window=8)  # same lattice_key, new signature
+    eng.dispatch("attention", q, k, v)
+    eng.dispatch("attention", q, k, v, window=8)  # same lattice_key, new signature
     stats = eng.stats()["attention"]
     assert stats["signatures"] == 2
     # Masking flags share one scored lattice (engine-wide scored cache).
@@ -115,7 +117,7 @@ def test_attention_precompile_warms_serving_keys():
     """Precompiled attention entries must sit under the SAME executable-cache
     keys that real calls with the given batch/head layout hit — a later call
     at any seq <= m_max must not add cache entries."""
-    eng = VortexEngine("host_cpu", empirical_levels=())
+    eng = Engine("host_cpu", empirical_levels=())
     wl = AttentionWorkload(seq=None, head_dim=32)
     q = _arr((2, 4, 5, 32))
     k = v = _arr((2, 2, 5, 32))
@@ -126,15 +128,15 @@ def test_attention_precompile_warms_serving_keys():
     for seq in (5, 23, 61):
         qq = _arr((2, 4, seq, 32))
         kk = vv = _arr((2, 2, seq, 32))
-        eng.attention(qq, kk, vv)
+        eng.dispatch("attention", qq, kk, vv)
     assert kernel.cache_info["entries"] == entries_before
 
 
 def test_executable_cache_bounded_by_buckets():
-    eng = VortexEngine("host_cpu", empirical_levels=())
+    eng = Engine("host_cpu", empirical_levels=())
     b = _arr((64, 48))
     for m in range(1, 40):  # 39 distinct runtime shapes
-        eng.gemm(_arr((m, 64)), b)
+        eng.dispatch("gemm", _arr((m, 64)), b)
     s = eng.stats()["gemm"]
     assert s["exec_hits"] == 39
     # Bounded by the lattice's bucket set, not by #distinct shapes.
@@ -283,10 +285,10 @@ def test_attn_forward_routes_through_engine():
     kw = dict(mode="prefill", positions=positions, cache_len=32)
 
     y_ref, _ = layers.attn_forward(p, x, cfg, spec, rules, **kw)
-    eng = VortexEngine("host_cpu", empirical_levels=())
-    with layers.attention_engine(eng):
+    eng = Engine("host_cpu", empirical_levels=())
+    with vortex.use(eng):
         y_eng, _ = layers.attn_forward(p, x, cfg, spec, rules, **kw)
-    assert layers.get_attention_engine() is None  # scoped install restored
+    assert vortex.installed_engine() is None  # scoped install restored
     np.testing.assert_allclose(
         np.asarray(y_eng), np.asarray(y_ref), rtol=1e-4, atol=1e-4
     )

@@ -17,7 +17,7 @@ from repro.core import (
 )
 from repro.core.analyzer import AnalyticalProfiler, HybridAnalyzer
 from repro.core.candidates import generate_lattice
-from repro.core.engine import VortexEngine
+from repro.vortex import Engine
 from repro.core.selector import RuntimeSelector
 
 
@@ -172,11 +172,11 @@ def test_engine_dispatch_reuses_kernel_without_workload_rebuild():
     kernel per call-site signature, found without constructing Workloads."""
     import jax.numpy as jnp
 
-    eng = VortexEngine("host_cpu", empirical_levels=())
+    eng = Engine("host_cpu", empirical_levels=())
     rng = np.random.default_rng(0)
     b = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
     for m in (8, 16, 13):
-        eng.gemm(jnp.asarray(rng.normal(size=(m, 64)), jnp.float32), b)
+        eng.dispatch("gemm", jnp.asarray(rng.normal(size=(m, 64)), jnp.float32), b)
     assert len(eng._dispatch) == 1
     assert len(eng._kernels) == 1
     assert eng._dispatch[("gemm", 64, 48)] is next(iter(eng._kernels.values()))
@@ -184,8 +184,8 @@ def test_engine_dispatch_reuses_kernel_without_workload_rebuild():
 
 def test_stats_does_not_build_tables():
     """Introspection must not charge a breakpoint sweep to idle kernels."""
-    eng = VortexEngine("host_cpu", empirical_levels=())
-    kern = eng.gemm_for(48, 64)  # kernel built, never dispatched
+    eng = Engine("host_cpu", empirical_levels=())
+    kern = eng.compile("gemm", M=None, N=48, K=64).kernel  # built, never dispatched
     s = eng.stats()["gemm"]
     assert s["table_entries"] == 0
     assert s["table_build_s"] == 0.0
@@ -199,15 +199,15 @@ def test_engine_skips_pad_when_bucket_aligned():
 
     from repro.kernels.ref import ref_gemm
 
-    eng = VortexEngine("host_cpu", empirical_levels=())
+    eng = Engine("host_cpu", empirical_levels=())
     rng = np.random.default_rng(1)
     b = jnp.asarray(rng.normal(size=(96, 80)), jnp.float32)
-    kern = eng.gemm_for(80, 96)
+    kern = eng.compile("gemm", M=None, N=80, K=96).kernel
     aligned_m = kern.select(64).padded_m  # an exactly-bucket-sized extent
     a = jnp.asarray(rng.normal(size=(aligned_m, 96)), jnp.float32)
     assert kern.workload.is_bucket_aligned(kern.select(aligned_m), a, b)
     np.testing.assert_allclose(
-        np.asarray(eng.gemm(a, b)), np.asarray(ref_gemm(a, b)),
+        np.asarray(eng.dispatch("gemm", a, b)), np.asarray(ref_gemm(a, b)),
         rtol=1e-4, atol=1e-4,
     )
 
@@ -217,8 +217,8 @@ def test_parallel_precompile_matches_serial():
     and subsequent calls add no entries."""
     import jax.numpy as jnp
 
-    eng_p = VortexEngine("host_cpu", empirical_levels=())
-    eng_s = VortexEngine("host_cpu", empirical_levels=())
+    eng_p = Engine("host_cpu", empirical_levels=())
+    eng_s = Engine("host_cpu", empirical_levels=())
     wl = GemmWorkload(M=None, N=48, K=64)
     n_p = eng_p.kernel_for(wl).precompile(128)
     n_s = eng_s.kernel_for(wl).precompile(128, max_workers=1)
@@ -229,5 +229,5 @@ def test_parallel_precompile_matches_serial():
     rng = np.random.default_rng(2)
     b = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
     for m in (3, 65, 127):
-        eng_p.gemm(jnp.asarray(rng.normal(size=(m, 64)), jnp.float32), b)
+        eng_p.dispatch("gemm", jnp.asarray(rng.normal(size=(m, 64)), jnp.float32), b)
     assert kp.cache_info["entries"] == entries

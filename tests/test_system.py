@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core import GemmWorkload, HOST_CPU, VortexGemm
+from repro.core import GemmWorkload, HOST_CPU, VortexKernel
 from repro.core.baselines import SampleDrivenCompiler, VendorBaseline
 from repro.data.pipeline import SyntheticLMDataset
 from repro.models.params import init_params
@@ -72,7 +72,7 @@ def test_off_sample_robustness_mechanism():
     off-sample shapes to its sample grid; Vortex's lattice bounds padding
     everywhere.  Compare padded-M waste directly (hardware-independent)."""
     wl = GemmWorkload(M=None, N=256, K=256)
-    vortex = VortexGemm(HOST_CPU, wl, empirical_levels=())
+    vortex = VortexKernel(HOST_CPU, wl, empirical_levels=())
     sampled = SampleDrivenCompiler(
         HOST_CPU, wl, samples=[128, 192, 256], search_budget=2, repeats=1
     )
@@ -92,7 +92,7 @@ def test_offline_compile_time_gap():
     cheaper than tuning micro-kernels per sample on real hardware."""
     wl = GemmWorkload(M=None, N=128, K=128)
     t0 = time.perf_counter()
-    vortex = VortexGemm(HOST_CPU, wl, empirical_levels=())
+    vortex = VortexKernel(HOST_CPU, wl, empirical_levels=())
     vortex_s = time.perf_counter() - t0
     sampled = SampleDrivenCompiler(
         HOST_CPU, wl, samples=[32, 64, 96, 128], search_budget=4, repeats=2
@@ -129,3 +129,39 @@ def test_dynamic_serving_end_to_end(mesh):
         assert out.shape == (b, 2)
     # 6 distinct request shapes must share a smaller bucket set.
     assert server.stats["prefill_compiles"] < len(shapes)
+
+
+def test_server_buckets_are_engine_selector_buckets(mesh):
+    """Acceptance (ISSUE 3): the server's sequence buckets must BE the
+    engine selector's lattice buckets (`selections_upto`) — no second,
+    hand-rolled bucketing scheme beside the selection table."""
+    from repro.launch.serve import VortexServer
+
+    cfg = get_smoke_config("paper-gpt2-124m")
+    server = VortexServer(cfg, mesh, max_cache=128)
+    selector = server._seq_op.kernel.selector
+    expect = sorted({
+        min(sel.padded_m, 128) for sel in selector.selections_upto(128)
+    })
+    assert server.seq_buckets() == expect
+    for s in range(1, 129):
+        assert server.seq_bucket(s) == min(selector.select(s).padded_m, 128)
+
+
+def test_server_warmup_precompiles_buckets(mesh):
+    """After warmup, in-range requests are all bucket hits: zero prefill
+    compilations at serving time."""
+    from repro.launch.serve import Request, VortexServer
+
+    cfg = get_smoke_config("paper-gpt2-124m")
+    server = VortexServer(cfg, mesh, max_cache=64)
+    n = server.warmup(max_batch=2, m_max=64)
+    assert n == server.stats["prefill_compiles"] > 0
+    rng = np.random.default_rng(3)
+    for (b, s) in [(1, 5), (2, 17), (1, 33)]:
+        out = server.generate(Request(
+            tokens=rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+            max_new=2,
+        ))
+        assert out.shape == (b, 2)
+    assert server.stats["prefill_compiles"] == n  # nothing new compiled
