@@ -32,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, ClassVar, Mapping
 
+import numpy as np
+
 from repro.core.hardware import HardwareSpec
 from repro.core.rkernel import (
     AnalyzeType,
@@ -45,6 +47,7 @@ __all__ = [
     "GemmWorkload",
     "AttentionWorkload",
     "Conv2dWorkload",
+    "SelectionDeviationError",
     "WORKLOADS",
     "register_workload",
     "make_workload",
@@ -102,19 +105,28 @@ def _make_program(
     return RKernelProgram(kind=kind, layers=tuple(layers), hardware=hw.name)
 
 
-def _pal_blocks(l1: Tile, n: int, k: int) -> tuple[int, int, int, int, int]:
-    """Pallas block sizes + padded static dims for a GEMM-view executable.
+class SelectionDeviationError(RuntimeError):
+    """An executable would have to deviate from its Selection to run.
 
-    The dynamic dim is already padded to the l1 m-tile by the engine; the
-    static N/K dims are padded *inside* the compiled executable (static pad
-    amounts, so the artifact stays shape-stable per bucket).
+    The masked-tail kernels honor the selected layer-1 tile verbatim (tails
+    are masked in-kernel, never clamped), so the only way a Selection can
+    fail to be honored is an internal inconsistency — e.g. a bucket that is
+    not a multiple of its own tile.  Raising beats silently running a tile
+    the cost model never priced.
     """
-    m1, n1, k1 = l1
-    bn = min(n1, n)
-    bk = min(k1, k)
-    np_ = -(-n // bn) * bn
-    kp = -(-k // bk) * bk
-    return m1, bn, bk, np_, kp
+
+
+def _check_bucket_tiles(kind: str, sel, pairs) -> None:
+    """Every (bucket extent, tile) pair must divide exactly — the staged
+    buffers are bucket-shaped, so a non-dividing tile would force the grid
+    to deviate from the priced launch geometry."""
+    for name, extent, tile in pairs:
+        if tile < 1 or extent % tile:
+            raise SelectionDeviationError(
+                f"{kind}: bucket {name}={extent} is not a multiple of the "
+                f"selected l1 tile {tile} (strategy l1={sel.strategy.l1}, "
+                f"bucket={sel.bucket}); refusing to clamp the tile"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,48 +242,79 @@ class Workload:
     def program(self, hw: HardwareSpec) -> RKernelProgram:
         raise NotImplementedError
 
-    # ---- execution (engine hooks) -----------------------------------------
+    # ---- execution (engine hooks): the masked-tail staging contract -------
     # ``sel`` below is a selector.Selection; jax is imported lazily so the
     # analytical core stays importable without an accelerator stack.
+    #
+    # The fused per-bucket executable built by ``build_executable`` consumes
+    # bucket-shaped buffers PLUS the true runtime extents as trailing i32
+    # scalars (``runtime_scalars``), and masks the pad tail in-kernel — the
+    # pad region of a staged buffer may hold ARBITRARY GARBAGE (stale bytes
+    # from an earlier call), never relying on zero fill.  The engine:
+    #
+    #   1. maps the call args through ``stage_view`` (identity for GEMM and
+    #      attention; im2col for conv),
+    #   2. compares each view arg's shape against ``staged_shapes`` — args
+    #      that already match run with ZERO copies (the aligned fast path),
+    #   3. stages mismatched args into engine-owned, donated bucket buffers
+    #      (``lax.dynamic_update_slice``: O(true-size) writes, no alloc, no
+    #      zero-fill) and launches the one compiled program,
+    #   4. slices the bucket-shaped output back via ``finalize``.
+    #
+    # ``prepare`` (zero-pad the view to the bucket) remains as the REFERENCE
+    # path: functionally identical, used for parity tests and for calls that
+    # arrive as tracers inside an enclosing jit (where XLA fuses the pads
+    # into the surrounding program anyway and engine-owned buffers must not
+    # be captured).
 
-    # True when ``prepare`` only pads the dynamic dims (and ``finalize``
-    # only slices them back): the engine then skips BOTH entirely when the
-    # runtime extent is already bucket-aligned — the zero-rebuild hot path
-    # does no padding work at all.  Workloads whose prepare transforms data
-    # (conv's im2col) keep this False.
-    prepare_is_pad_only: ClassVar[bool] = False
+    supports_staging: ClassVar[bool] = False
 
     def dynamic_extent(self, *args) -> int:
         """The runtime value of the dynamic dim, from the call arguments."""
         raise NotImplementedError
-
-    def is_bucket_aligned(self, sel, *args) -> bool:
-        """True when the call args already match ``sel``'s bucket exactly
-        (prepare/finalize would be identities).  Only consulted when
-        ``prepare_is_pad_only`` is set."""
-        return False
 
     def exec_key(self, *args) -> tuple:
         """Extra executable-cache key parts beyond the bucket (outer dims
         that the compiled artifact is specialized on)."""
         return ()
 
-    def prepare(self, sel, *args) -> tuple:
-        """Pad/reshape call args to the selected bucket."""
+    def stage_view(self, *args) -> tuple:
+        """Map call args to the arrays the fused executable consumes
+        (identity unless the workload transforms data first, e.g. im2col)."""
+        return args
+
+    def staged_shapes(self, sel, *view) -> tuple:
+        """Per view arg: the bucket-shaped staging-buffer shape, or None
+        for static args that are passed through unstaged."""
+        raise NotImplementedError
+
+    def runtime_scalars(self, sel, *view) -> tuple:
+        """True runtime extents appended to every executable call as i32
+        scalars — what the masked-tail kernels mask against."""
+        return ()
+
+    def prepare(self, sel, *view) -> tuple:
+        """Reference path: zero-pad the view args to the bucket shapes."""
         raise NotImplementedError
 
     def finalize(self, sel, out, *args):
-        """Undo :meth:`prepare` on the executable's output."""
+        """Slice the bucket-shaped output back to the true extents (and
+        reshape where the view changed layout).  Must be an identity-cheap
+        no-op when the call was already bucket-aligned."""
         raise NotImplementedError
 
     def build_executable(
         self, sel, *, impl: str, interpret: bool
     ) -> Callable:
-        """Build the bucket-shaped executable for a runtime selection."""
+        """Build the fused bucket-shaped executable for a runtime selection:
+        ``fn(*bucket_view_args, *runtime_scalars) -> bucket-shaped out``.
+        Raises :class:`SelectionDeviationError` rather than adjusting the
+        selected tile."""
         raise NotImplementedError
 
     def example_args(self, sel, *args) -> tuple:
-        """Zero arrays of the executable's input shapes (jit warmup)."""
+        """Zero arrays + scalars matching the executable's full signature
+        (AOT lowering / warmup)."""
         raise NotImplementedError
 
     def reference(self, *args):
@@ -301,7 +344,7 @@ class GemmWorkload(Workload):
     dynamic_dims: tuple[str, ...] = ("M",)
 
     kind: ClassVar[str] = "gemm"
-    prepare_is_pad_only: ClassVar[bool] = True
+    supports_staging: ClassVar[bool] = True
 
     @classmethod
     def bind(cls, a, b) -> "GemmWorkload":
@@ -336,8 +379,11 @@ class GemmWorkload(Workload):
     def dynamic_extent(self, a, b) -> int:
         return a.shape[0]
 
-    def is_bucket_aligned(self, sel, a, b) -> bool:
-        return sel.padded_m == a.shape[0]
+    def staged_shapes(self, sel, a, b) -> tuple:
+        return ((sel.padded_m, self.K), None)
+
+    def runtime_scalars(self, sel, a, b) -> tuple:
+        return (np.int32(a.shape[0]),)
 
     def prepare(self, sel, a, b) -> tuple:
         import jax.numpy as jnp
@@ -355,27 +401,26 @@ class GemmWorkload(Workload):
         import jax
         import jax.numpy as jnp
 
-        N, K = self.N, self.K
+        m1, n1, k1 = sel.strategy.l1
+        _check_bucket_tiles(self.kind, sel, (("m", sel.padded_m, m1),))
         if impl == "pallas":
             from repro.kernels.gemm import vortex_gemm
 
-            bm, bn, bk, np_, kp = _pal_blocks(sel.strategy.l1, N, K)
-
-            def fn(a, b):
-                if kp != K:
-                    a = jnp.pad(a, ((0, 0), (0, kp - K)))
-                    b = jnp.pad(b, ((0, kp - K), (0, 0)))
-                if np_ != N:
-                    b = jnp.pad(b, ((0, 0), (0, np_ - N)))
-                out = vortex_gemm(
-                    a, b, block_m=bm, block_n=bn, block_k=bk,
+            # The selected tile runs verbatim: N/K tails that don't divide
+            # (n1, k1) are masked in-kernel, the m pad tail is masked via
+            # the runtime extent — no in-program pads or slices remain.
+            def fn(a, b, m_true):
+                return vortex_gemm(
+                    a, b, m_true, block_m=m1, block_n=n1, block_k=k1,
                     interpret=interpret,
                 )
-                return out[:, :N] if np_ != N else out
 
         else:
 
-            def fn(a, b):
+            def fn(a, b, m_true):
+                # Rows of A @ B are independent, so garbage pad rows cannot
+                # contaminate the real rows; the extent scalar is unused.
+                del m_true
                 return jax.lax.dot_general(
                     a, b, (((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32,
@@ -386,9 +431,16 @@ class GemmWorkload(Workload):
     def example_args(self, sel, *args) -> tuple:
         import jax.numpy as jnp
 
+        # Match the caller's dtypes when representative args are present:
+        # the AOT artifact lowered from these IS the steady-state fast
+        # path, and a dtype mismatch would demote every call to jit
+        # dispatch.
+        da = args[0].dtype if args else jnp.float32
+        db = args[1].dtype if args else jnp.float32
         return (
-            jnp.zeros((sel.padded_m, self.K), jnp.float32),
-            jnp.zeros((self.K, self.N), jnp.float32),
+            jnp.zeros((sel.padded_m, self.K), da),
+            jnp.zeros((self.K, self.N), db),
+            np.int32(sel.padded_m),
         )
 
     def reference(self, a, b):
@@ -414,10 +466,13 @@ class AttentionWorkload(Workload):
     the native lane tile — head_dim is static and fits one block — which
     keeps the attention lattice free of meaningless n variation.
 
-    Padding correctness relies on the causal mask: padded key positions sit
-    above every true query position and are masked; padded query rows are
-    sliced off.  Hence ``causal=True`` is required (the dynamic-seq LM case
-    the paper targets).
+    Padding correctness comes from an EXPLICIT key-validity mask: the true
+    kv length rides along as a runtime scalar and the kernel masks scores
+    (and zeroes value rows) past it, so bucket pad — even garbage bytes in
+    a staging buffer — can never reach a real query row.  The causal
+    structure is no longer load-bearing for padding, which is why
+    ``causal=False`` (encoder/bidirectional attention) buckets just as
+    safely as the causal LM case.
     """
 
     seq: int | None
@@ -431,14 +486,7 @@ class AttentionWorkload(Workload):
 
     kind: ClassVar[str] = "attention"
     dynamic_tile_axes: ClassVar[tuple[int, ...]] = (0, 2)
-    prepare_is_pad_only: ClassVar[bool] = True
-
-    def __post_init__(self) -> None:
-        if not self.causal:
-            raise NotImplementedError(
-                "engine-routed attention requires causal=True: zero-padded "
-                "key positions are only masked by the causal structure"
-            )
+    supports_staging: ClassVar[bool] = True
 
     @classmethod
     def bind(
@@ -517,10 +565,18 @@ class AttentionWorkload(Workload):
         # Outer (batch, heads) dims specialize the compiled artifact.
         return (q.shape[0], q.shape[1], k.shape[1])
 
-    def is_bucket_aligned(self, sel, q, k, v) -> bool:
+    def staged_shapes(self, sel, q, k, v) -> tuple:
+        pq, d, pkv = sel.bucket
+        b, hq, _, _ = q.shape
+        hkv = k.shape[1]
         return (
-            sel.bucket[0] == q.shape[-2] and sel.bucket[2] == k.shape[-2]
+            (b, hq, pq, d),
+            (b, hkv, pkv, d),
+            (b, hkv, pkv, d),
         )
+
+    def runtime_scalars(self, sel, q, k, v) -> tuple:
+        return (np.int32(k.shape[-2]),)
 
     def prepare(self, sel, q, k, v) -> tuple:
         import jax.numpy as jnp
@@ -542,15 +598,17 @@ class AttentionWorkload(Workload):
     def build_executable(self, sel, *, impl: str, interpret: bool):
         pq, _, pkv = sel.bucket
         m1, _, k1 = sel.strategy.l1
-        block_q, block_k = min(m1, pq), min(k1, pkv)
+        _check_bucket_tiles(
+            self.kind, sel, (("q", pq, m1), ("kv", pkv, k1))
+        )
         causal, window, softcap = self.causal, self.window, self.softcap
 
         if impl == "pallas":
             from repro.kernels.attention import flash_attention
 
-            def fn(q, k, v):
+            def fn(q, k, v, kv_len):
                 return flash_attention(
-                    q, k, v, block_q=block_q, block_k=block_k,
+                    q, k, v, kv_len, block_q=m1, block_k=k1,
                     causal=causal, window=window, softcap=softcap,
                     interpret=interpret,
                 )
@@ -558,10 +616,10 @@ class AttentionWorkload(Workload):
         else:
             from repro.kernels.ref import chunked_attention
 
-            def fn(q, k, v):
+            def fn(q, k, v, kv_len):
                 return chunked_attention(
                     q, k, v, causal=causal, window=window, softcap=softcap,
-                    chunk=block_k,
+                    chunk=k1, kv_len=kv_len,
                 )
 
         return fn
@@ -572,12 +630,15 @@ class AttentionWorkload(Workload):
         pq, d, pkv = sel.bucket
         if args:
             b, hq, hkv = self.exec_key(*args)
+            dts = tuple(a.dtype for a in args)
         else:
             b, hq, hkv = 1, 1, 1
+            dts = (jnp.float32,) * 3
         return (
-            jnp.zeros((b, hq, pq, d), jnp.float32),
-            jnp.zeros((b, hkv, pkv, d), jnp.float32),
-            jnp.zeros((b, hkv, pkv, d), jnp.float32),
+            jnp.zeros((b, hq, pq, d), dts[0]),
+            jnp.zeros((b, hkv, pkv, d), dts[1]),
+            jnp.zeros((b, hkv, pkv, d), dts[2]),
+            np.int32(pkv),
         )
 
     def reference(self, q, k, v):
@@ -615,6 +676,7 @@ class Conv2dWorkload(Workload):
     dynamic_dims: tuple[str, ...] = ("m",)
 
     kind: ClassVar[str] = "conv2d"
+    supports_staging: ClassVar[bool] = True
 
     @classmethod
     def bind(cls, x, w, *, stride: int = 1) -> "Conv2dWorkload":
@@ -662,14 +724,23 @@ class Conv2dWorkload(Workload):
         ho, wo = self._out_hw(x)
         return x.shape[0] * ho * wo
 
-    def prepare(self, sel, x, w) -> tuple:
-        import jax.numpy as jnp
-
+    def stage_view(self, x, w) -> tuple:
         from repro.kernels.conv import im2col
 
         cols, _ = im2col(x, self.kh, self.kw, self.stride)
         # conv_general_dilated_patches orders features (cin, kh, kw).
         wmat = w.transpose(2, 0, 1, 3).reshape(self.K, self.cout)
+        return cols, wmat
+
+    def staged_shapes(self, sel, cols, wmat) -> tuple:
+        return ((sel.padded_m, self.K), None)
+
+    def runtime_scalars(self, sel, cols, wmat) -> tuple:
+        return (np.int32(cols.shape[0]),)
+
+    def prepare(self, sel, cols, wmat) -> tuple:
+        import jax.numpy as jnp
+
         m = cols.shape[0]
         if sel.padded_m != m:
             cols = jnp.pad(cols, ((0, sel.padded_m - m), (0, 0)))
@@ -682,7 +753,7 @@ class Conv2dWorkload(Workload):
 
     def build_executable(self, sel, *, impl: str, interpret: bool):
         # The executable is the GEMM-view kernel on the im2col matrix; the
-        # im2col expansion itself runs eagerly in prepare() so the cached
+        # im2col expansion itself runs eagerly in stage_view() so the cached
         # artifact depends only on the bucket, not on (b, h, w) directly.
         return GemmWorkload(
             M=None, N=self.N, K=self.K, dtype_bytes=self.dtype_bytes,
@@ -692,9 +763,14 @@ class Conv2dWorkload(Workload):
     def example_args(self, sel, *args) -> tuple:
         import jax.numpy as jnp
 
+        # args are the raw (x, w) call args; the executable consumes the
+        # im2col view, which keeps the input dtypes.
+        dx = args[0].dtype if args else jnp.float32
+        dw = args[1].dtype if args else jnp.float32
         return (
-            jnp.zeros((sel.padded_m, self.K), jnp.float32),
-            jnp.zeros((self.K, self.N), jnp.float32),
+            jnp.zeros((sel.padded_m, self.K), dx),
+            jnp.zeros((self.K, self.N), dw),
+            np.int32(sel.padded_m),
         )
 
     def reference(self, x, w):

@@ -5,6 +5,15 @@ sequence length — exactly the paper's dynamic-M case.  The (block_q, block_k)
 pair is drawn from the Vortex layer-1 lattice (m-tile for queries, k-tile for
 keys), so the same sample-free bucketing governs attention and plain GEMMs.
 
+Key-side padding is handled by an EXPLICIT validity mask, not by the causal
+structure: ``kv_len`` (a runtime i32 scalar in SMEM) marks how many leading
+key/value rows are real, scores past it are masked to -inf and the value
+rows are zeroed on load.  The pad tail of k/v may therefore hold arbitrary
+garbage (stale bytes in an engine staging buffer, NaNs), and non-causal
+attention buckets exactly as safely as causal attention.  Requested blocks
+are honored verbatim — sequence lengths that are not block multiples get
+masked boundary tiles, never a silently clamped block.
+
 Supports causal masking, sliding-window attention (h2o-danube, gemma2 local
 layers) and GQA (kv heads shared across query-head groups via the BlockSpec
 index map).  TARGET: TPU; validated on CPU with ``interpret=True``.
@@ -19,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams as _CompilerParams
+from repro.kernels.gemm import validate_blocks
 
 __all__ = ["flash_attention"]
 
@@ -26,11 +36,17 @@ _NEG_INF = -1e30
 
 
 def _attn_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    kv_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     *, gkv: int, block_q: int, block_k: int, scale: float,
     causal: bool, window: int | None, softcap: float | None,
 ):
-    """One (head, q-block): stream kv blocks, online softmax in VMEM scratch."""
+    """One (head, q-block): stream kv blocks, online softmax in VMEM scratch.
+
+    ``kv_ref`` (SMEM) holds the TRUE key/value length; everything past it —
+    bucket pad, stale staging bytes, out-of-bounds block tails — is masked
+    out of the scores and zeroed out of the PV product, so no zero-filled
+    padding (and no causal structure) is needed for correctness.
+    """
     kv_i = pl.program_id(2)
 
     @pl.when(kv_i == 0)
@@ -42,6 +58,7 @@ def _attn_kernel(
     q = q_ref[0]  # (block_q, d)
     k = k_ref[0]  # (block_k, d)
     v = v_ref[0]
+    kv_limit = kv_ref[0]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
@@ -52,12 +69,20 @@ def _attn_kernel(
     k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1
     )
-    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    mask = k_pos < kv_limit  # key validity: replaces zero-pad reliance
     if causal:
         mask &= k_pos <= q_pos
     if window is not None:
         mask &= q_pos - k_pos < window
     s = jnp.where(mask, s, _NEG_INF)
+
+    # Invalid value rows must be ZEROED, not merely down-weighted: their
+    # softmax weight is an exact 0.0, but 0 * garbage(NaN/Inf) would still
+    # poison the accumulator of every REAL query row.
+    v_rows = kv_i * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 0
+    )
+    v = jnp.where(v_rows < kv_limit, v, 0)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
@@ -85,6 +110,7 @@ def flash_attention(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    kv_len=None,
     *,
     block_q: int = 128,
     block_k: int = 128,
@@ -98,7 +124,11 @@ def flash_attention(
     Args:
       q: (batch, q_heads, seq, head_dim)
       k, v: (batch, kv_heads, seq, head_dim); q_heads % kv_heads == 0 (GQA).
-      block_q/block_k: Vortex layer-1 tiles for the sequence dims.
+      kv_len: optional runtime i32 scalar — the number of REAL key/value
+        rows; rows past it (staging-buffer pad, garbage) are masked out.
+        Defaults to the full (static) key length.
+      block_q/block_k: Vortex layer-1 tiles for the sequence dims — honored
+        verbatim; non-multiple sequence lengths get masked boundary tiles.
       window: sliding-window size (keys within [q-window+1, q]).
       softcap: gemma2-style logit soft-capping applied to QK^T scores.
     Returns (batch, q_heads, seq, head_dim).
@@ -107,14 +137,12 @@ def flash_attention(
     _, hkv, skv, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
     group = hq // hkv
-    block_q = min(block_q, sq)
-    block_k = min(block_k, skv)
-    if sq % block_q or skv % block_k:
-        raise ValueError(
-            f"seq lens ({sq},{skv}) not aligned to blocks ({block_q},{block_k})"
-        )
-    gq, gkv = sq // block_q, skv // block_k
+    validate_blocks("flash_attention", block_q=block_q, block_k=block_k)
+    gq, gkv = pl.cdiv(sq, block_q), pl.cdiv(skv, block_k)
     scale = d ** -0.5
+    if kv_len is None:
+        kv_len = skv
+    kv_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
 
     qf = q.reshape(b * hq, sq, d)
     kf = k.reshape(b * hkv, skv, d)
@@ -134,6 +162,7 @@ def flash_attention(
         kernel,
         grid=(b * hq, gq, gkv),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
             pl.BlockSpec((1, block_k, d), kv_map),
             pl.BlockSpec((1, block_k, d), kv_map),
@@ -149,5 +178,5 @@ def flash_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qf, kf, vf)
+    )(kv_arr, qf, kf, vf)
     return out.reshape(b, hq, sq, d)

@@ -4,13 +4,14 @@ The paper benchmarks convolution (Table 4) by lowering it to the same
 hierarchized GEMM strategy space: im2col turns Conv2D into a GEMM with
 M = b*h'*w' (dynamic: batch/fmap), N = cout, K = kh*kw*cin — after which the
 entire Vortex lattice/selector machinery applies unchanged.
+
+The GEMM-view kernel masks its own tails (kernels/gemm.py), so this path is
+padding-free end to end: no dim is rounded up, no block is clamped to the
+shape, and the blocks the caller selected are the blocks that run.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.gemm import vortex_gemm
 
@@ -42,7 +43,7 @@ def vortex_conv2d(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """Conv2D (VALID) through im2col + Vortex-tiled GEMM.
+    """Conv2D (VALID) through im2col + masked-tail Vortex GEMM.
 
     Args: x (b, h, w, cin); w (kh, kw, cin, cout).
     """
@@ -50,20 +51,8 @@ def vortex_conv2d(
     cols, (b, ho, wo) = im2col(x, kh, kw, stride)
     # conv_general_dilated_patches orders features as (cin, kh, kw); match it.
     wmat = w.transpose(2, 0, 1, 3).reshape(kh * kw * cin, cout)
-    m = cols.shape[0]
-
-    # Pad every dim up to block multiples (the engine normally does this at
-    # the bucket level; conv shapes are arbitrary so pad here).
-    def pad_to(v: int, blk: int) -> int:
-        blk = min(blk, max(v, 1))
-        return (v + blk - 1) // blk * blk, blk
-
-    mp, bm = pad_to(m, block_m)
-    np_, bn = pad_to(cout, block_n)
-    kp, bk = pad_to(cols.shape[1], block_k)
-    cols = jnp.pad(cols, ((0, mp - m), (0, kp - cols.shape[1])))
-    wmat = jnp.pad(wmat, ((0, kp - wmat.shape[0]), (0, np_ - cout)))
     out = vortex_gemm(
-        cols, wmat, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
+        cols, wmat, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
     )
-    return out[:m, :cout].reshape(b, ho, wo, cout)
+    return out.reshape(b, ho, wo, cout)

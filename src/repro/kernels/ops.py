@@ -18,21 +18,24 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def matmul(a, b, *, block_m=128, block_n=128, block_k=128, interpret=None):
+def matmul(
+    a, b, m_true=None, *, block_m=128, block_n=128, block_k=128,
+    interpret=None,
+):
     interpret = (not on_tpu()) if interpret is None else interpret
     return vortex_gemm(
-        a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+        a, b, m_true, block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=interpret,
     )
 
 
 def attention(
-    q, k, v, *, block_q=128, block_k=128, causal=True, window=None,
-    softcap=None, interpret=None,
+    q, k, v, kv_len=None, *, block_q=128, block_k=128, causal=True,
+    window=None, softcap=None, interpret=None,
 ):
     interpret = (not on_tpu()) if interpret is None else interpret
     return flash_attention(
-        q, k, v, block_q=block_q, block_k=block_k, causal=causal,
+        q, k, v, kv_len, block_q=block_q, block_k=block_k, causal=causal,
         window=window, softcap=softcap, interpret=interpret,
     )
 

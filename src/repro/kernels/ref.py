@@ -28,13 +28,17 @@ def ref_gemm(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
 
 
 def _mask(
-    sq: int, skv: int, causal: bool, window: int | None, offset: int = 0
+    sq: int, skv: int, causal: bool, window: int | None, offset: int = 0,
+    kv_len=None,
 ) -> jax.Array:
     """(sq, skv) boolean mask. ``offset`` is the absolute position of query 0
-    (decode: offset = cache_len for a single new token)."""
+    (decode: offset = cache_len for a single new token).  ``kv_len`` is the
+    optional RUNTIME number of valid keys (rows past it are bucket pad)."""
     q_pos = offset + jnp.arange(sq)[:, None]
     k_pos = jnp.arange(skv)[None, :]
     m = jnp.ones((sq, skv), jnp.bool_)
+    if kv_len is not None:
+        m &= k_pos < kv_len
     if causal:
         m &= k_pos <= q_pos
     if window is not None:
@@ -51,22 +55,31 @@ def ref_attention(
     window: int | None = None,
     softcap: float | None = None,
     offset: int = 0,
+    kv_len=None,
 ) -> jax.Array:
     """Exact attention with full score materialization (oracle only).
 
     Shapes as kernels/attention.py: q (b, hq, sq, d); k, v (b, hkv, skv, d).
+    ``kv_len`` (optional runtime i32) marks the real key/value rows; rows
+    past it may hold arbitrary garbage (staged-bucket pad) and are both
+    score-masked and zeroed out of the PV product.
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     group = hq // hkv
     kx = jnp.repeat(k, group, axis=1) if group > 1 else k
     vx = jnp.repeat(v, group, axis=1) if group > 1 else v
+    if kv_len is not None:
+        # Zero invalid value rows: their softmax weight is exactly 0, but
+        # 0 * garbage(NaN) would still poison every real query row.
+        valid = (jnp.arange(skv) < kv_len)[None, None, :, None]
+        vx = jnp.where(valid, vx, 0)
     s = jnp.einsum(
         "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
     ) * (d ** -0.5)
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
-    m = _mask(sq, skv, causal, window, offset)
+    m = _mask(sq, skv, causal, window, offset, kv_len=kv_len)
     s = jnp.where(m[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
@@ -83,12 +96,17 @@ def chunked_attention(
     softcap: float | None = None,
     chunk: int = 1024,
     offset: int = 0,
+    kv_len=None,
     rules=None,
 ) -> jax.Array:
     """Flash-style online-softmax attention in pure JAX (lax.scan over kv
     chunks).  Never materializes the (sq, skv) score matrix, so the compiled
     artifact's memory stays linear in seq — this is what the model layers use
     (the Pallas kernel is the TPU-native version of the same loop).
+
+    ``kv_len`` (optional runtime i32) marks the real key/value rows, exactly
+    as in :func:`ref_attention` — required when the kv pad region may hold
+    garbage rather than zeros (the engine's staged buckets).
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
@@ -97,7 +115,7 @@ def chunked_attention(
     if skv <= chunk:
         return ref_attention(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            offset=offset,
+            offset=offset, kv_len=kv_len,
         )
     skv_true = skv
     pad = -skv % chunk
@@ -148,13 +166,18 @@ def chunked_attention(
             vb = jnp.repeat(vb, group, axis=1)
         kb = pin(kb.astype(jnp.float32))
         vb = pin(vb.astype(jnp.float32))
+        k_pos = ci * chunk + jnp.arange(chunk)
+        valid = k_pos < (
+            skv_true if kv_len is None else jnp.minimum(kv_len, skv_true)
+        )
+        if kv_len is not None:
+            # Garbage value rows past kv_len must be zeroed, not merely
+            # zero-weighted (0 * NaN poisons every real query row).
+            vb = jnp.where(valid[None, None, :, None], vb, 0)
         s = pin(jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale)
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
-        k_pos = ci * chunk + jnp.arange(chunk)
-        msk = jnp.broadcast_to(
-            (k_pos < skv_true)[None, :], (sq, chunk)
-        )
+        msk = jnp.broadcast_to(valid[None, :], (sq, chunk))
         if causal:
             msk = msk & (k_pos[None, :] <= q_pos[:, None])
         if window is not None:

@@ -16,10 +16,14 @@ Prefill executables are AOT-compiled per bucket through ONE jit function
 counts real XLA compilations — not per-shape Python wrappers around a jit
 that retraces anyway.  Lowering runs under ``engine.use()``: causal
 prefill attention inside the model dispatches through the engine session,
-so the compiled programs embed lattice-selected attention blocks.
-``warmup()`` AOT-compiles the per-bucket prefill programs (warming the
-engine's attention executables through the session) before traffic
-arrives.
+so the compiled programs embed lattice-selected attention blocks.  (The
+engine serves those trace-time calls through its zero-pad reference path
+— the pads fuse into the prefill program — and counts them as
+``traced_calls``; eager dispatch outside a trace takes the masked-tail
+staging hot path, whose launch/copy counters
+``engine_dispatch_stats`` surfaces.)  ``warmup()`` AOT-compiles the
+per-bucket prefill programs (warming the engine's attention executables
+through the session) before traffic arrives.
 
 ``python -m repro.launch.serve --arch paper-gpt2-124m --smoke --requests 16``
 """
@@ -184,6 +188,21 @@ class VortexServer:
             bp *= 2
         return compiled
 
+    def engine_dispatch_stats(self) -> dict[str, dict]:
+        """Per-kind hot-path accounting from the engine session: launches,
+        staging/unstaging copies, aligned vs unaligned calls, and how many
+        calls ran padded (trace-time lowering).  The padding-free serving
+        contract in one dict — what ops dashboards should scrape."""
+        keep = (
+            "calls", "launches", "aligned_calls", "unaligned_calls",
+            "stage_copies", "unstage_copies", "padded_calls",
+            "traced_calls",
+        )
+        return {
+            kind: {k: s[k] for k in keep}
+            for kind, s in self.engine.stats().items()
+        }
+
     # -- serving ------------------------------------------------------------
 
     def generate(self, req: Request) -> np.ndarray:
@@ -245,6 +264,13 @@ def main() -> None:
         f"compiles={server.stats['prefill_compiles']} "
         f"bucket_hits={server.stats['bucket_hits']}"
     )
+    for kind, d in server.engine_dispatch_stats().items():
+        print(
+            f"engine/{kind}: launches={d['launches']} "
+            f"stage_copies={d['stage_copies']} "
+            f"unstage_copies={d['unstage_copies']} "
+            f"padded={d['padded_calls']} traced={d['traced_calls']}"
+        )
 
 
 if __name__ == "__main__":

@@ -37,6 +37,10 @@ class EngineConfig:
       this value (only for workloads whose executables are not specialized
       on outer dims — those need representative args, see
       ``CompiledOp.precompile``).
+    * ``staging`` — serve unaligned extents through the masked-tail staging
+      hot path (engine-owned donated bucket buffers + one fused AOT launch,
+      DESIGN.md §4).  False forces every call onto the zero-pad reference
+      path — a debugging/parity knob, not a serving configuration.
     """
 
     hardware: str = "host_cpu"
@@ -48,6 +52,7 @@ class EngineConfig:
     table_m_max: int = 4096
     table_extend_limit: int = 1 << 17
     precompile_m_max: int = 0
+    staging: bool = True
 
     def __post_init__(self) -> None:
         if self.backends is not None:

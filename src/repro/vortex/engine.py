@@ -136,6 +136,7 @@ class Engine:
                         scored_cache=self._scored_cache,
                         table_m_max=cfg.table_m_max,
                         table_extend_limit=cfg.table_extend_limit,
+                        staging=cfg.staging,
                     )
                     self._kernels[key] = kern
         return kern
@@ -233,6 +234,14 @@ class Engine:
                     "table_entries": 0, "table_build_s": 0.0,
                     "exec_entries": 0, "exec_hits": 0,
                     "compile_seconds": 0.0,
+                    # Hot-path copy/launch accounting (DispatchStats): the
+                    # padding-free contract is checkable from here — an
+                    # unaligned call is exactly one launch plus its
+                    # staging/unstaging boundary copies, never a jnp.pad.
+                    "calls": 0, "launches": 0,
+                    "aligned_calls": 0, "unaligned_calls": 0,
+                    "stage_copies": 0, "unstage_copies": 0,
+                    "padded_calls": 0, "traced_calls": 0,
                 },
             )
             sstats = kernel.selector.stats
@@ -250,6 +259,8 @@ class Engine:
             agg["exec_entries"] += cinfo["entries"]
             agg["exec_hits"] += cinfo["hits"]
             agg["compile_seconds"] += cinfo["compile_seconds"]
+            for key, val in kernel.dispatch_stats.as_dict().items():
+                agg[key] += val
         return out
 
     def __repr__(self) -> str:

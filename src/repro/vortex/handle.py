@@ -91,13 +91,18 @@ class CompiledOp:
     # -- introspection ------------------------------------------------------
 
     def stats(self) -> dict:
-        """Selection-path and executable-cache accounting for this op."""
+        """Selection-path, executable-cache and hot-path copy/launch
+        accounting for this op.  ``dispatch`` carries the padding-free
+        contract's observables: launches per call, staging/unstaging copies
+        for unaligned extents, and how many calls fell back to the zero-pad
+        reference path (``padded_calls`` — 0 in steady-state serving)."""
         k = self._kernel
         return {
             "kind": self.kind,
             "signature": self.workload.signature,
             "select": k.select_stats,
             "exec": k.cache_info,
+            "dispatch": k.dispatch_stats.as_dict(),
             "offline": k.offline_stats,
         }
 

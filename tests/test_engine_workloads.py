@@ -85,11 +85,18 @@ def test_conv2d_matches_reference(engine, batch, hw_px):
     )
 
 
-def test_non_causal_attention_rejected():
-    eng = Engine("host_cpu", empirical_levels=())
-    q = k = v = _arr((1, 1, 8, 32))
-    with pytest.raises(NotImplementedError):
-        eng.dispatch("attention", q, k, v, causal=False)
+def test_non_causal_attention_served(engine):
+    """Bucket padding no longer leans on the causal structure: the explicit
+    kv-validity mask makes bidirectional (encoder) attention bucket exactly
+    as safely, at a prime (pad-exercising) sequence length."""
+    q = _arr((1, 2, 53, 32))
+    k = _arr((1, 2, 53, 32))
+    v = _arr((1, 2, 53, 32))
+    out = engine.dispatch("attention", q, k, v, causal=False)
+    ref = ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3
+    )
 
 
 # ---------------------------------------------------------------------------

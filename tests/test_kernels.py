@@ -45,10 +45,89 @@ def test_gemm_matches_ref(case, dtype):
     )
 
 
-def test_gemm_rejects_misaligned():
-    a, b = _arr((100, 128), jnp.float32), _arr((128, 128), jnp.float32)
-    with pytest.raises(ValueError):
-        vortex_gemm(a, b, block_m=64, block_n=64, block_k=64, interpret=True)
+def test_gemm_masked_tails_handle_misaligned_shapes():
+    """Shapes that are not block multiples run with masked boundary tiles —
+    the selected blocks are honored verbatim, never clamped or rejected."""
+    a, b = _arr((100, 150), jnp.float32), _arr((150, 130), jnp.float32)
+    out = vortex_gemm(a, b, block_m=64, block_n=64, block_k=64,
+                      interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref_gemm(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_gemm_blocks_larger_than_shape_honored():
+    """A selected tile larger than the whole problem still runs (grid 1,
+    fully masked boundary) instead of being silently clamped to the shape."""
+    a, b = _arr((5, 7), jnp.float32), _arr((7, 3), jnp.float32)
+    out = vortex_gemm(a, b, block_m=64, block_n=64, block_k=64,
+                      interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref_gemm(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_gemm_rejects_degenerate_blocks():
+    a, b = _arr((64, 64), jnp.float32), _arr((64, 64), jnp.float32)
+    with pytest.raises(ValueError, match="cannot be honored"):
+        vortex_gemm(a, b, block_m=0, block_n=64, block_k=64, interpret=True)
+
+
+def test_gemm_m_true_masks_garbage_tail():
+    """Rows past the runtime extent are masked on load: NaN garbage in the
+    pad tail (a stale staging buffer) cannot reach the real rows, and the
+    real rows are bit-identical to a zero-padded run."""
+    m_true = 77
+    a = _arr((128, 96), jnp.float32)
+    b = _arr((96, 64), jnp.float32)
+    a_zero = a.at[m_true:].set(0.0)
+    a_nan = a.at[m_true:].set(jnp.nan)
+    out_zero = vortex_gemm(a_zero, b, m_true, block_m=64, block_n=64,
+                           block_k=64, interpret=True)
+    out_nan = vortex_gemm(a_nan, b, m_true, block_m=64, block_n=64,
+                          block_k=64, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out_zero)[:m_true], np.asarray(out_nan)[:m_true]
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_nan)[:m_true], np.asarray(ref_gemm(a, b))[:m_true],
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_flash_attention_kv_len_masks_garbage_tail():
+    """kv rows past the runtime kv_len are score-masked and value-zeroed:
+    NaN garbage there cannot poison any real query row, causal or not."""
+    kv_true = 53
+    q = _arr((1, 2, 64, 32), jnp.float32)
+    k = _arr((1, 2, 64, 32), jnp.float32)
+    v = _arr((1, 2, 64, 32), jnp.float32)
+    k_nan = k.at[:, :, kv_true:].set(jnp.nan)
+    v_nan = v.at[:, :, kv_true:].set(jnp.nan)
+    for causal in (True, False):
+        out = flash_attention(
+            q, k_nan, v_nan, kv_true, block_q=32, block_k=32,
+            causal=causal, interpret=True,
+        )
+        ref = ref_attention(
+            q[:, :, :kv_true] if causal else q,
+            k[:, :, :kv_true], v[:, :, :kv_true], causal=causal,
+        )
+        got = np.asarray(out)[:, :, :kv_true] if causal else np.asarray(out)
+        np.testing.assert_allclose(got, np.asarray(ref), rtol=2e-3,
+                                   atol=2e-3)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_flash_attention_misaligned_seq_masked():
+    """Sequence lengths that are not block multiples run with masked
+    boundary tiles (no clamping, no pre-padding required)."""
+    q = _arr((1, 2, 100, 32), jnp.float32)
+    out = flash_attention(q, q, q, block_q=64, block_k=64, causal=True,
+                          interpret=True)
+    ref = ref_attention(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
 
 
 ATTN_CASES = [

@@ -205,11 +205,17 @@ def test_engine_skips_pad_when_bucket_aligned():
     kern = eng.compile("gemm", M=None, N=80, K=96).kernel
     aligned_m = kern.select(64).padded_m  # an exactly-bucket-sized extent
     a = jnp.asarray(rng.normal(size=(aligned_m, 96)), jnp.float32)
-    assert kern.workload.is_bucket_aligned(kern.select(aligned_m), a, b)
+    sel = kern.select(aligned_m)
+    assert kern.workload.staged_shapes(sel, a, b)[0] == a.shape
     np.testing.assert_allclose(
         np.asarray(eng.dispatch("gemm", a, b)), np.asarray(ref_gemm(a, b)),
         rtol=1e-4, atol=1e-4,
     )
+    # The aligned extent took the zero-copy fast path: one launch, no
+    # staging, no pad fallback.
+    d = eng.stats()["gemm"]
+    assert d["aligned_calls"] == 1 and d["launches"] == 1
+    assert d["stage_copies"] == 0 and d["padded_calls"] == 0
 
 
 def test_parallel_precompile_matches_serial():

@@ -1,0 +1,249 @@
+"""The padding-free hot path: masked-tail staging vs the zero-pad reference.
+
+Acceptance surface of the staging contract (DESIGN.md §4):
+
+  * every registered workload kind, at extents {1, bucket-1, bucket,
+    bucket+1, prime}, is BIT-IDENTICAL between the staged hot path and the
+    zero-pad reference path, on both executable impls;
+  * poisoned staging — the engine-owned buffers' pad regions are filled
+    with NaNs and the outputs must not move (correctness comes from the
+    kernel masks, never from zero fill);
+  * the copy/launch counters: an unaligned call is exactly ONE fused
+    program launch plus its boundary copies, an aligned call is one launch
+    with zero copies, and ``jnp.pad`` (the padded fallback) never fires;
+  * a Selection that cannot be honored raises instead of being clamped.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workloads import (
+    AttentionWorkload,
+    Conv2dWorkload,
+    GemmWorkload,
+    SelectionDeviationError,
+)
+from repro.vortex import Engine
+
+RNG = np.random.default_rng(11)
+
+
+def _arr(shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+@pytest.fixture(scope="module", params=["xla", "pallas"])
+def engine(request):
+    return Engine(
+        "host_cpu", empirical_levels=(), impl=request.param, interpret=True
+    )
+
+
+# One entry per registered workload kind: (workload params for
+# engine.dispatch kwargs, args builder at a given dynamic extent m).
+# Conv uses a 1x1 kernel on a (1, 1, m, cin) image so that the im2col
+# extent is EXACTLY m — every probe extent is reachable.
+def _gemm_args(m):
+    return (_arr((m, 96)), _arr((96, 80)))
+
+
+def _attn_args(m):
+    return (_arr((2, 4, m, 32)), _arr((2, 2, m, 32)), _arr((2, 2, m, 32)))
+
+
+def _conv_args(m):
+    return (_arr((1, 1, m, 5)), _arr((1, 1, 5, 7)))
+
+
+KIND_CASES = [
+    ("gemm", {}, _gemm_args),
+    ("attention", {}, _attn_args),
+    ("conv2d", {}, _conv_args),
+]
+
+
+def _probe_extents(kern) -> list[int]:
+    bucket = kern.select(257).padded_m
+    prime = 263
+    return sorted({1, bucket - 1, bucket, bucket + 1, prime})
+
+
+@pytest.mark.parametrize("kind,params,make", KIND_CASES,
+                         ids=[c[0] for c in KIND_CASES])
+def test_staged_bit_identical_to_padded_reference(engine, kind, params, make):
+    """Staged hot path == zero-pad reference path, bitwise, at every
+    boundary extent (1, bucket-1, bucket, bucket+1, prime)."""
+    kern = engine.op_kernel(kind, make(8), params)
+    for m in _probe_extents(kern):
+        args = make(m)
+        staged = np.asarray(kern(*args))
+        padded = np.asarray(kern.call_padded(*args))
+        np.testing.assert_array_equal(
+            staged, padded,
+            err_msg=f"{kind}: staged != padded at extent {m}",
+        )
+        ref = np.asarray(kern.workload.reference(*args))
+        np.testing.assert_allclose(
+            staged, ref, rtol=2e-3, atol=2e-3,
+            err_msg=f"{kind}: staged != flat reference at extent {m}",
+        )
+
+
+@pytest.mark.parametrize("kind,params,make", KIND_CASES,
+                         ids=[c[0] for c in KIND_CASES])
+def test_poisoned_staging_buffers_do_not_leak(engine, kind, params, make):
+    """Fill every staging buffer's pad region with NaNs (by poisoning the
+    WHOLE buffer — staging then overwrites only the true extent) and assert
+    the outputs are unaffected: correctness is the kernel's masking."""
+    kern = engine.op_kernel(kind, make(8), params)
+    bucket = kern.select(257).padded_m
+    m = bucket - 1  # unaligned: staging buffers are in play
+    args = make(m)
+    padded = np.asarray(kern.call_padded(*args))
+    np.testing.assert_array_equal(np.asarray(kern(*args)), padded)
+    poisoned = 0
+    for entry in kern._exec_cache.values():
+        for i, buf in entry.buffers.items():
+            entry.buffers[i] = jnp.full_like(buf, jnp.nan)
+            poisoned += 1
+    assert poisoned >= 1, "unaligned dispatch must have created buffers"
+    again = np.asarray(kern(*args))
+    assert np.isfinite(again).all(), f"{kind}: NaN poison leaked"
+    np.testing.assert_array_equal(
+        again, padded, err_msg=f"{kind}: poisoned staging changed output"
+    )
+
+
+def test_unaligned_dispatch_is_one_launch_plus_boundary_copies():
+    """The acceptance counter: an unaligned extent issues exactly one
+    compiled-program launch, one staging copy per dynamic operand, one
+    output slice — and never a jnp.pad fallback."""
+    eng = Engine("host_cpu", empirical_levels=())
+    a, b = _gemm_args(61)
+    eng.dispatch("gemm", a, b)
+    d = eng.stats()["gemm"]
+    assert d["launches"] == 1
+    assert d["unaligned_calls"] == 1 and d["aligned_calls"] == 0
+    assert d["stage_copies"] == 1  # only A is dynamic; B passes through
+    assert d["unstage_copies"] == 1
+    assert d["padded_calls"] == 0 and d["traced_calls"] == 0
+
+    q, k, v = _attn_args(37)
+    eng.dispatch("attention", q, k, v)
+    d = eng.stats()["attention"]
+    assert d["launches"] == 1
+    assert d["stage_copies"] == 3  # q, k and v all stage
+    assert d["padded_calls"] == 0
+
+
+def test_aligned_dispatch_is_one_launch_zero_copies():
+    eng = Engine("host_cpu", empirical_levels=())
+    kern = eng.op_kernel("gemm", _gemm_args(8), {})
+    aligned_m = kern.select(257).padded_m
+    eng.dispatch("gemm", *_gemm_args(aligned_m))
+    d = eng.stats()["gemm"]
+    assert d["aligned_calls"] == 1 and d["launches"] == 1
+    assert d["stage_copies"] == 0 and d["unstage_copies"] == 0
+    assert d["padded_calls"] == 0
+
+
+def test_staging_buffers_are_reused_not_reallocated():
+    """Two unaligned calls in the same bucket reuse ONE engine-owned buffer
+    (donated in place), and the executable cache does not grow."""
+    eng = Engine("host_cpu", empirical_levels=())
+    kern = eng.op_kernel("gemm", _gemm_args(8), {})
+    bucket = kern.select(257).padded_m
+    kern(*_gemm_args(bucket - 1))
+    entries = len(kern._exec_cache)
+    buffers = sum(len(e.buffers) for e in kern._exec_cache.values())
+    kern(*_gemm_args(bucket - 2))
+    assert len(kern._exec_cache) == entries
+    assert sum(len(e.buffers) for e in kern._exec_cache.values()) == buffers
+    assert kern.dispatch_stats.stage_copies == 2
+
+
+def test_tracer_context_falls_back_to_functional_path():
+    """Inside an enclosing jit the engine must not capture its own buffers:
+    tracer calls take the zero-pad functional path (which XLA fuses into
+    the surrounding program) and are counted as traced, not launched."""
+    eng = Engine("host_cpu", empirical_levels=())
+    a, b = _gemm_args(61)
+
+    @jax.jit
+    def outer(a, b):
+        return eng.dispatch("gemm", a, b) * 2.0
+
+    out = np.asarray(outer(a, b))
+    ref = 2.0 * np.asarray(eng.dispatch("gemm", a, b))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    d = eng.stats()["gemm"]
+    assert d["traced_calls"] == 1
+    assert d["launches"] == 1  # only the eager reference dispatch launched
+
+
+def test_staging_disabled_knob_matches_staged_outputs():
+    """EngineConfig.staging=False forces the zero-pad reference path; the
+    numbers must not move (it is a parity/debug knob, not a semantics
+    switch)."""
+    staged = Engine("host_cpu", empirical_levels=())
+    padded = Engine("host_cpu", empirical_levels=(), staging=False)
+    for m in (1, 61, 128):
+        args = _gemm_args(m)
+        np.testing.assert_array_equal(
+            np.asarray(staged.dispatch("gemm", *args)),
+            np.asarray(padded.dispatch("gemm", *args)),
+        )
+    d = padded.stats()["gemm"]
+    assert d["launches"] == 0 and d["stage_copies"] == 0
+
+
+def test_selection_deviation_raises_instead_of_clamping():
+    """A Selection whose bucket is not a multiple of its own tile cannot be
+    honored; the builder must refuse loudly, never clamp the tile."""
+    eng = Engine("host_cpu", empirical_levels=())
+    kern = eng.op_kernel("gemm", _gemm_args(8), {})
+    sel = kern.select(64)
+    bad = dataclasses.replace(sel, padded_m=sel.padded_m + 1)
+    with pytest.raises(SelectionDeviationError, match="not a multiple"):
+        kern.workload.build_executable(bad, impl="pallas", interpret=True)
+
+    wl = AttentionWorkload(seq=None, head_dim=32)
+    akern = eng.kernel_for(wl)
+    asel = akern.select(64)
+    abad = dataclasses.replace(
+        asel, bucket=(asel.bucket[0] + 1,) + asel.bucket[1:]
+    )
+    with pytest.raises(SelectionDeviationError, match="not a multiple"):
+        wl.build_executable(abad, impl="pallas", interpret=True)
+
+
+def test_conv_stage_view_feeds_the_gemm_bucket():
+    """Conv's im2col runs in stage_view; the staged buffer is the GEMM-view
+    bucket, and the unaligned call still serves in one fused launch."""
+    eng = Engine("host_cpu", empirical_levels=())
+    x, w = _conv_args(61)
+    out = eng.dispatch("conv2d", x, w)
+    wl = Conv2dWorkload(m=None, cin=5, cout=7, kh=1, kw=1)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(wl.reference(x, w)),
+        rtol=1e-3, atol=1e-3,
+    )
+    d = eng.stats()["conv2d"]
+    assert d["launches"] == 1 and d["stage_copies"] == 1
+    assert d["padded_calls"] == 0
+
+
+def test_gemm_workload_staged_shapes_contract():
+    """The staged-shape tuple marks exactly the dynamic operands."""
+    wl = GemmWorkload(M=None, N=80, K=96)
+    eng = Engine("host_cpu", empirical_levels=())
+    kern = eng.kernel_for(wl)
+    a, b = _gemm_args(61)
+    sel = kern.select(61)
+    shapes = wl.staged_shapes(sel, a, b)
+    assert shapes == ((sel.padded_m, 96), None)
+    assert wl.runtime_scalars(sel, a, b) == (61,)

@@ -55,8 +55,10 @@ def test_registered_toy_workload_served_with_no_engine_edits():
                 self, sel, impl=impl, interpret=interpret
             )
 
-            def fn(a, b):
-                return 2.0 * inner(a, b)
+            # The staging contract: the fused executable takes the bucket
+            # view plus the runtime-extent scalars (here gemm's m_true).
+            def fn(a, b, m_true):
+                return 2.0 * inner(a, b, m_true)
 
             return fn
 
