@@ -284,10 +284,65 @@ def _bench_hot_path(smoke: bool) -> dict[str, dict]:
     return results
 
 
+def _bench_decode(smoke: bool) -> dict:
+    """The serving decode section: drive VortexServer through a prompt
+    whose generation crosses a kv-bucket boundary and report the per-token
+    decode contract (one AOT launch per token, zero pad fallbacks, growth
+    copies only at bucket transitions) plus steady-state wall-clock per
+    token.  CI gates launches_per_token == 1 and padded_calls == 0."""
+    from jax.sharding import Mesh
+    from repro.launch.serve import Request, VortexServer
+    from repro.models.registry import get_smoke_config
+
+    cfg = get_smoke_config("paper-gpt2-124m")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    server = VortexServer(cfg, mesh, max_cache=256)
+    rng = np.random.default_rng(17)
+    s = 120
+    kvb0 = server.kv_bucket(server.seq_bucket(s))
+    max_new = min(max(kvb0 - s + 4, 8), 24)
+    reqs = [
+        Request(
+            tokens=rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+            max_new=max_new,
+        )
+        for b in (1, 2)
+    ]
+    # Warm EVERY (batch, seq) shape once: the timed window below must hold
+    # decode steps only — a first-time jit trace + AOT compile (seconds)
+    # inside it would make us_per_token track compile noise, not decode.
+    for req in reqs:
+        server.generate(req)
+    tokens_before = server.decode_stats.calls
+    t0 = time.perf_counter()
+    for req in reqs:
+        server.generate(req)
+    wall = time.perf_counter() - t0
+    d = server.decode_stats
+    tokens = d.calls
+    timed = max(tokens - tokens_before, 1)
+    # Engine-side REAL observables from the decode lowerings: padded == 0
+    # means no zero-pad was baked into any compiled decode step (every
+    # traced dispatch hit the bucket-aligned path).
+    eng_decode = server.engine_dispatch_stats()["decode_attention"]
+    return {
+        "tokens": tokens,
+        "launches_per_token": d.launches / max(tokens, 1),
+        "padded_calls": d.padded_calls,
+        "growth_copies": d.stage_copies,
+        "bucket_transitions": d.unaligned_calls,
+        "decode_exec_buckets": len(server._decode_exec),
+        "decode_compiles": server.stats["decode_compiles"],
+        "engine_traced_calls": eng_decode["traced_calls"],
+        "engine_padded_calls": eng_decode["padded_calls"],
+        "decode_us_per_token": wall / timed * 1e6,
+    }
+
+
 def serving_payload(smoke: bool) -> dict:
     """The BENCH_serving.json payload (benchmarks/run.py --json): dispatch
     overhead on unseen shapes, the aligned-vs-unaligned hot-path ratio and
-    copies/launches per call."""
+    copies/launches per call, and the serving decode contract."""
     hardware = "host_cpu"
     eng = Engine(hardware, empirical_levels=(() if smoke else None))
     hw = get_hardware(hardware)
@@ -310,6 +365,7 @@ def serving_payload(smoke: bool) -> dict:
         "mode": "smoke" if smoke else "full",
         "dispatch": _bench_dispatch(eng, hw, smoke),
         "hot_path": _bench_hot_path(smoke),
+        "decode": _bench_decode(smoke),
     }
 
 

@@ -51,6 +51,7 @@ from repro.core.workloads import (
     WORKLOADS,
     AttentionWorkload,
     Conv2dWorkload,
+    DecodeAttentionWorkload,
     GemmWorkload,
     Workload,
     make_workload,

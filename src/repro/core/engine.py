@@ -125,6 +125,61 @@ def _stage_into(buf, x):
     return jax.lax.dynamic_update_slice(buf, x, (0,) * buf.ndim)
 
 
+class _StagingPool:
+    """A small pool of engine-owned staging-buffer SETS for one cache entry.
+
+    One set (a dict mapping view-arg index -> bucket-shaped buffer) serves
+    one in-flight unaligned dispatch: concurrent same-bucket calls each
+    check out their own set, stage and launch WITHOUT any entry-wide lock,
+    and return the set afterwards — the per-dtype-singleton design this
+    replaces serialized staging AND the launch of every concurrent
+    same-bucket call behind one lock (ROADMAP: multi-tenant serialization).
+
+    The pool lock covers only the list pop/append (nanoseconds).  A set's
+    buffers keep whatever stale bytes the last staging left past the true
+    extent — never re-zeroed; correctness is the kernel's kv_len/m_true
+    masking (the poisoned-staging tests assert it).  At most ``cap`` sets
+    are retained; a burst beyond the cap allocates transient sets that are
+    simply dropped on release.
+    """
+
+    __slots__ = ("cap", "_lock", "_free")
+
+    def __init__(self, cap: int = 4):
+        self.cap = cap
+        self._lock = threading.Lock()
+        self._free: list[dict] = []
+
+    def acquire(self, need: dict) -> dict:
+        """A buffer set satisfying ``need`` (index -> (shape, dtype)).
+        Reuses a pooled set when every needed slot matches; otherwise
+        builds fresh zero-initialized buffers (zeros only because a fresh
+        buffer must not leak other tenants' bytes through the never-read
+        pad — the kernels never rely on it)."""
+        with self._lock:
+            for i, bufs in enumerate(self._free):
+                for idx, (shape, dtype) in need.items():
+                    b = bufs.get(idx)
+                    if b is None or b.shape != shape or b.dtype != dtype:
+                        break
+                else:
+                    return self._free.pop(i)
+        return {
+            idx: jax.numpy.zeros(shape, dtype)
+            for idx, (shape, dtype) in need.items()
+        }
+
+    def release(self, bufs: dict) -> None:
+        with self._lock:
+            if len(self._free) < self.cap:
+                self._free.append(bufs)
+
+    @property
+    def retained(self) -> list[dict]:
+        """The currently pooled buffer sets (tests poison these)."""
+        return self._free
+
+
 @dataclasses.dataclass
 class _CacheEntry:
     """One fused per-bucket program + its engine-owned staging state.
@@ -132,9 +187,9 @@ class _CacheEntry:
     ``fn`` is the dtype-flexible jitted program (also what tracer-context
     calls inline); ``aot`` is the AOT ``lower().compile()`` artifact for the
     bucket's canonical dtypes — the steady-state serve path, which skips
-    jit's dispatch machinery entirely.  ``buffers`` maps view-arg index to
-    the engine-owned bucket-shaped staging buffer (created lazily on the
-    first unaligned call; its pad region is NEVER re-zeroed — correctness
+    jit's dispatch machinery entirely.  ``pool`` holds the engine-owned
+    bucket-shaped staging buffer sets (created lazily on the first
+    unaligned call; their pad regions are NEVER re-zeroed — correctness
     is the kernel's masking, asserted by the poisoned-staging tests).
     """
 
@@ -143,8 +198,7 @@ class _CacheEntry:
     aot: Any = None
     aot_dtypes: tuple = ()
     hits: int = 0
-    buffers: dict = dataclasses.field(default_factory=dict)
-    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    pool: _StagingPool = dataclasses.field(default_factory=_StagingPool)
 
     def run(self, *args):
         if self.aot is not None and len(args) == len(self.aot_dtypes):
@@ -225,6 +279,10 @@ class VortexKernel:
             backends=backends,
         )
         self._exec_cache: dict[tuple, _CacheEntry] = {}
+        # DispatchStats increments are read-modify-writes; concurrent
+        # same-bucket dispatch (the staging pool's whole point) would lose
+        # counts without this.  Never held across a launch.
+        self._stats_lock = threading.Lock()
 
     @property
     def workload(self) -> Workload:
@@ -356,12 +414,15 @@ class VortexKernel:
         sel = self.selector.select(m)
         entry = self._entry_for(sel, args)
         st = self.dispatch_stats
-        st.calls += 1
         view = wl.stage_view(*args)
         if not self._staging:
+            with self._stats_lock:
+                st.calls += 1
             return self._call_padded(sel, entry, args, view)
         if any(isinstance(a, jax.core.Tracer) for a in view):
-            st.traced_calls += 1
+            with self._stats_lock:
+                st.calls += 1
+                st.traced_calls += 1
             return self._call_padded(sel, entry, args, view)
         scalars = wl.runtime_scalars(sel, *view)
         shapes = wl.staged_shapes(sel, *view)
@@ -370,30 +431,32 @@ class VortexKernel:
             if s is not None and view[i].shape != s
         ]
         if not unaligned:
-            st.aligned_calls += 1
-            st.launches += 1
+            with self._stats_lock:
+                st.calls += 1
+                st.aligned_calls += 1
+                st.launches += 1
             out = entry.run(*view, *scalars)
             return wl.finalize(sel, out, *args)
-        st.unaligned_calls += 1
-        with entry.lock:
-            staged = list(view)
-            for i in unaligned:
-                buf = entry.buffers.get(i)
-                x = view[i]
-                if (
-                    buf is None
-                    or buf.shape != shapes[i]
-                    or buf.dtype != x.dtype
-                ):
-                    # One-time per (entry, dtype); the hot path reuses it.
-                    buf = jax.numpy.zeros(shapes[i], x.dtype)
-                buf = _stage_into(buf, x)
-                entry.buffers[i] = buf
-                staged[i] = buf
-                st.stage_copies += 1
+        # Check a buffer set out of the entry's pool: staging and the
+        # launch run with NO entry-wide lock, so concurrent same-bucket
+        # dispatches overlap instead of serializing (each set is private
+        # to this call until released).
+        need = {i: (shapes[i], view[i].dtype) for i in unaligned}
+        bufs = entry.pool.acquire(need)
+        staged = list(view)
+        for i in unaligned:
+            buf = _stage_into(bufs[i], view[i])
+            bufs[i] = buf
+            staged[i] = buf
+        with self._stats_lock:
+            st.calls += 1
+            st.unaligned_calls += 1
+            st.stage_copies += len(unaligned)
             st.launches += 1
-            out = entry.run(*staged, *scalars)
-        st.unstage_copies += 1
+            if wl.unstages:
+                st.unstage_copies += 1
+        out = entry.run(*staged, *scalars)
+        entry.pool.release(bufs)
         return wl.finalize(sel, out, *args)
 
     def _call_padded(self, sel, entry, args, view=None) -> jax.Array:
@@ -409,7 +472,8 @@ class VortexKernel:
         if not wl.supports_staging:
             # Legacy-contract workloads: prepare is the only bucket mapping
             # (it must be an identity for already-aligned extents).
-            st.padded_calls += 1
+            with self._stats_lock:
+                st.padded_calls += 1
             out = entry.fn(*wl.prepare(sel, *view), *scalars)
             return wl.finalize(sel, out, *args)
         shapes = wl.staged_shapes(sel, *view)
@@ -419,7 +483,8 @@ class VortexKernel:
         if aligned:
             out = entry.fn(*view, *scalars)
         else:
-            st.padded_calls += 1
+            with self._stats_lock:
+                st.padded_calls += 1
             out = entry.fn(*wl.prepare(sel, *view), *scalars)
         return wl.finalize(sel, out, *args)
 
@@ -430,7 +495,8 @@ class VortexKernel:
         wl = self._wl
         sel = self.selector.select(wl.dynamic_extent(*args))
         entry = self._entry_for(sel, args)
-        self.dispatch_stats.calls += 1
+        with self._stats_lock:
+            self.dispatch_stats.calls += 1
         return self._call_padded(sel, entry, args)
 
     @property

@@ -271,6 +271,9 @@ class RuntimeSelector:
         return out
 
     def buckets_upto(self, m_max: int) -> list[int]:
-        """All distinct padded-M buckets the selector can emit for M in
-        [1, m_max]."""
-        return sorted({s.padded_m for s in self.selections_upto(m_max)})
+        """All distinct padded dynamic-extent buckets the selector can emit
+        for M in [1, m_max] (``Workload.dynamic_bucket``: padded_m for
+        GEMM-view workloads, the kv bucket for decode attention)."""
+        return sorted({
+            self._wl.dynamic_bucket(s) for s in self.selections_upto(m_max)
+        })

@@ -46,6 +46,7 @@ __all__ = [
     "Workload",
     "GemmWorkload",
     "AttentionWorkload",
+    "DecodeAttentionWorkload",
     "Conv2dWorkload",
     "SelectionDeviationError",
     "WORKLOADS",
@@ -237,6 +238,14 @@ class Workload:
         _, N, K = self.runtime_dims(1)
         return (grid[0] * l1[0], N, K)
 
+    def dynamic_bucket(self, sel) -> int:
+        """The padded DYNAMIC extent of a Selection — what serving layers
+        quantize to (``CompiledOp.bucket``).  The default is the padded m
+        axis; workloads whose dynamic dim lives elsewhere in the
+        contraction view (decode attention: the kv/reduction axis)
+        override this to point at the right bucket component."""
+        return sel.padded_m
+
     # ---- rKernel program --------------------------------------------------
 
     def program(self, hw: HardwareSpec) -> RKernelProgram:
@@ -268,6 +277,11 @@ class Workload:
     # be captured).
 
     supports_staging: ClassVar[bool] = False
+    # Whether finalize() performs a boundary copy (the out[:m] slice) on
+    # unaligned calls.  Workloads whose output shape never depends on the
+    # bucket (decode attention: out is always (b, h, 1, d)) set this False
+    # so DispatchStats.unstage_copies stays an honest copy count.
+    unstages: ClassVar[bool] = True
 
     def dynamic_extent(self, *args) -> int:
         """The runtime value of the dynamic dim, from the call arguments."""
@@ -647,6 +661,191 @@ class AttentionWorkload(Workload):
         return ref_attention(
             q, k, v, causal=self.causal, window=self.window,
             softcap=self.softcap,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (q_len == 1 against a kv-bucketed cache)
+# ---------------------------------------------------------------------------
+
+
+@register_workload
+@dataclasses.dataclass(frozen=True)
+class DecodeAttentionWorkload(AttentionWorkload):
+    """Single-token decode attention against a KV cache.
+
+    The DYNAMIC extent is the cache length S — a static per-call-site
+    shape, which is what makes selection work both eagerly and inside a
+    traced decode program.  Selection prices the same (S, head_dim, S)
+    view as prefill :class:`AttentionWorkload`: decode streams exactly the
+    kv block (l1 k-tile) the prefill kernel would stream at sequence
+    length S, so the decode kv-bucket set IS the prefill kv-bucket set
+    (lattice-granular, not degenerate — a literal (1, d, S) view makes
+    Eq. 2-4 flat in the k-tile and the argmin collapses to the smallest
+    tile, a bucket every 2 tokens).  Only the q block differs at
+    execution: q_len == 1 is static, so the kernel runs block_q == 1 and
+    the lattice m-tile never materializes.  The TRUE number of valid
+    cache rows rides as the ``kv_len`` runtime scalar (a Python int in
+    eager serving, a traced i32 inside a compiled decode step): scores
+    past it are masked and value rows zeroed by the kernel, so the cache
+    tail beyond ``kv_len`` — bucket pad, stale staging bytes, NaNs — can
+    never reach the query row.  Causality needs no flag: the query sits at
+    absolute position ``kv_len - 1``, so the key-validity mask IS the
+    causal mask; sliding windows re-base through the same offset.
+
+    Call signature: ``decode_attention(q, k, v, kv_len)`` with q
+    (b, hq, 1, d) and k/v (b, hkv, S, d), S >= kv_len >= 1.  Two serving
+    shapes hit the padding-free path:
+
+      * S already a kv bucket (the serving cache lives in bucket-shaped
+        buffers and grows in place by ``dynamic_update_slice``) — aligned,
+        one launch, zero copies, every token;
+      * arbitrary S — k/v stage into engine-owned kv-bucket buffers whose
+        tails keep stale garbage, then one launch.
+
+    The scored lattice is SHARED with :class:`AttentionWorkload` (same
+    ``lattice_key``): the kv block is the same l1 k-tile the prefill
+    kernel streams, so decode adds zero offline lattice work.
+    """
+
+    kind: ClassVar[str] = "decode_attention"
+    supports_staging: ClassVar[bool] = True
+    unstages: ClassVar[bool] = False  # out is (b, hq, 1, d): nothing to slice
+
+    @classmethod
+    def bind(
+        cls, q, k, v, kv_len, *,
+        window: int | None = None, softcap: float | None = None,
+    ) -> "DecodeAttentionWorkload":
+        return cls(
+            seq=None, head_dim=q.shape[-1], causal=True,
+            window=window, softcap=softcap,
+        )
+
+    @classmethod
+    def dispatch_key(
+        cls, q, k, v, kv_len, *,
+        window: int | None = None, softcap: float | None = None,
+    ) -> tuple:
+        return (q.shape[-1], window, softcap)
+
+    @property
+    def lattice_key(self) -> tuple:
+        # Decode streams the same (block_q, block_k) tile space as prefill
+        # attention; share its scored lattices (the literal kind string —
+        # NOT self.kind — so both workloads hash to one cache entry).
+        return ("attention", self.head_dim, self.dtype_bytes, self.acc_bytes)
+
+    # runtime_dims stays the inherited (S, head_dim, S) prefill view — the
+    # selection pricing contract above.  flops() reports the TRUE decode
+    # work (one query row), not the priced view.
+
+    def flops(self, m: int | None = None) -> float:
+        s = self.seq if m is None else m
+        assert s is not None
+        return 4.0 * s * self.head_dim  # one query row: QK^T + PV
+
+    def bucket_dims(self, grid: Tile, l1: Tile) -> Tile:
+        return (1, self.head_dim, grid[2] * l1[2])
+
+    def dynamic_bucket(self, sel) -> int:
+        return sel.bucket[2]
+
+    # -- execution ---------------------------------------------------------
+
+    def dynamic_extent(self, q, k, v, kv_len) -> int:
+        assert q.shape[-2] == 1, (
+            f"decode attention takes ONE query row, got q_len={q.shape[-2]}"
+        )
+        return k.shape[-2]
+
+    def exec_key(self, q, k, v, kv_len) -> tuple:
+        return (q.shape[0], q.shape[1], k.shape[1])
+
+    def stage_view(self, q, k, v, kv_len) -> tuple:
+        # Coerce a Python-int kv_len to np.int32 so the steady-state call
+        # matches the AOT artifact's dtypes (a bare int would demote every
+        # dispatch to jit re-dispatch); traced/jax values pass through.
+        if isinstance(kv_len, (bool, int, np.integer)):
+            kv_len = np.int32(kv_len)
+        return q, k, v, kv_len
+
+    def staged_shapes(self, sel, q, k, v, kv_len) -> tuple:
+        _, d, pkv = sel.bucket
+        b, hkv = k.shape[0], k.shape[1]
+        # q and the kv_len scalar pass through unstaged; only the cache
+        # buffers are bucket-shaped.
+        return (None, (b, hkv, pkv, d), (b, hkv, pkv, d), None)
+
+    def runtime_scalars(self, sel, q, k, v, kv_len) -> tuple:
+        return ()  # kv_len already rides in the view
+
+    def prepare(self, sel, q, k, v, kv_len) -> tuple:
+        import jax.numpy as jnp
+
+        pkv = sel.bucket[2]
+        if pkv != k.shape[-2]:
+            pad = ((0, 0), (0, 0), (0, pkv - k.shape[-2]), (0, 0))
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+        return q, k, v, kv_len
+
+    def finalize(self, sel, out, q, k, v, kv_len):
+        return out  # (b, hq, 1, d) — never bucket-shaped
+
+    def build_executable(self, sel, *, impl: str, interpret: bool):
+        pkv = sel.bucket[2]
+        _, _, k1 = sel.strategy.l1
+        _check_bucket_tiles(self.kind, sel, (("kv", pkv, k1),))
+        window, softcap = self.window, self.softcap
+
+        if impl == "pallas":
+            from repro.kernels.attention import flash_attention
+
+            def fn(q, k, v, kv_len):
+                # causal=False: the kv_len validity mask already excludes
+                # every key past the query's absolute position kv_len-1.
+                return flash_attention(
+                    q, k, v, kv_len, q_offset=kv_len - 1,
+                    block_q=1, block_k=k1, causal=False,
+                    window=window, softcap=softcap, interpret=interpret,
+                )
+
+        else:
+            from repro.kernels.ref import chunked_attention
+
+            def fn(q, k, v, kv_len):
+                return chunked_attention(
+                    q, k, v, causal=False, window=window, softcap=softcap,
+                    chunk=k1, offset=kv_len - 1, kv_len=kv_len,
+                )
+
+        return fn
+
+    def example_args(self, sel, *args) -> tuple:
+        import jax.numpy as jnp
+
+        _, d, pkv = sel.bucket
+        if args:
+            b, hq, hkv = self.exec_key(*args)
+            dts = tuple(a.dtype for a in args[:3])
+        else:
+            b, hq, hkv = 1, 1, 1
+            dts = (jnp.float32,) * 3
+        return (
+            jnp.zeros((b, hq, 1, d), dts[0]),
+            jnp.zeros((b, hkv, pkv, d), dts[1]),
+            jnp.zeros((b, hkv, pkv, d), dts[2]),
+            np.int32(pkv),
+        )
+
+    def reference(self, q, k, v, kv_len):
+        from repro.kernels.ref import ref_attention
+
+        kv_len = int(kv_len)
+        return ref_attention(
+            q, k, v, causal=False, window=self.window,
+            softcap=self.softcap, offset=kv_len - 1, kv_len=kv_len,
         )
 
 

@@ -42,10 +42,15 @@ def _attn_kernel(
 ):
     """One (head, q-block): stream kv blocks, online softmax in VMEM scratch.
 
-    ``kv_ref`` (SMEM) holds the TRUE key/value length; everything past it —
-    bucket pad, stale staging bytes, out-of-bounds block tails — is masked
-    out of the scores and zeroed out of the PV product, so no zero-filled
-    padding (and no causal structure) is needed for correctness.
+    ``kv_ref`` (SMEM) holds two runtime scalars: the TRUE key/value length
+    and the absolute position of query row 0.  Everything past the kv
+    length — bucket pad, stale staging bytes, out-of-bounds block tails —
+    is masked out of the scores and zeroed out of the PV product, so no
+    zero-filled padding (and no causal structure) is needed for
+    correctness.  The query offset re-bases the causal/window masks so a
+    single-row decode query (``sq == 1`` at absolute position
+    ``kv_len - 1``) masks exactly like the matching row of a full-sequence
+    call.
     """
     kv_i = pl.program_id(2)
 
@@ -59,11 +64,12 @@ def _attn_kernel(
     k = k_ref[0]  # (block_k, d)
     v = v_ref[0]
     kv_limit = kv_ref[0]
+    q_off = kv_ref[1]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
 
-    q_pos = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+    q_pos = q_off + pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 0
     )
     k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
@@ -111,6 +117,7 @@ def flash_attention(
     k: jax.Array,
     v: jax.Array,
     kv_len=None,
+    q_offset=None,
     *,
     block_q: int = 128,
     block_k: int = 128,
@@ -127,8 +134,14 @@ def flash_attention(
       kv_len: optional runtime i32 scalar — the number of REAL key/value
         rows; rows past it (staging-buffer pad, garbage) are masked out.
         Defaults to the full (static) key length.
+      q_offset: optional runtime i32 scalar — the absolute position of
+        query row 0 (decode: ``kv_len - 1`` for the single new token).
+        Re-bases the causal/window masks; defaults to 0 (self-attention
+        with queries and keys sharing position 0).
       block_q/block_k: Vortex layer-1 tiles for the sequence dims — honored
         verbatim; non-multiple sequence lengths get masked boundary tiles.
+        A decode-shaped call (sq == 1) runs block_q == 1 — the q tile is
+        pinned by the static query length, not the lattice.
       window: sliding-window size (keys within [q-window+1, q]).
       softcap: gemma2-style logit soft-capping applied to QK^T scores.
     Returns (batch, q_heads, seq, head_dim).
@@ -142,7 +155,12 @@ def flash_attention(
     scale = d ** -0.5
     if kv_len is None:
         kv_len = skv
-    kv_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    if q_offset is None:
+        q_offset = 0
+    kv_arr = jnp.stack([
+        jnp.asarray(kv_len, jnp.int32).reshape(()),
+        jnp.asarray(q_offset, jnp.int32).reshape(()),
+    ])
 
     qf = q.reshape(b * hq, sq, d)
     kf = k.reshape(b * hkv, skv, d)

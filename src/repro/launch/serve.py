@@ -14,16 +14,30 @@ server quantizes both dims through the vortex engine session it owns:
 Prefill executables are AOT-compiled per bucket through ONE jit function
 (``jit(...).lower(...).compile()``), so ``stats["prefill_compiles"]``
 counts real XLA compilations — not per-shape Python wrappers around a jit
-that retraces anyway.  Lowering runs under ``engine.use()``: causal
-prefill attention inside the model dispatches through the engine session,
-so the compiled programs embed lattice-selected attention blocks.  (The
+that retraces anyway.  Lowering runs under ``engine.use()``: prefill AND
+decode attention inside the model dispatch through the engine session, so
+the compiled programs embed lattice-selected attention blocks.  (The
 engine serves those trace-time calls through its zero-pad reference path
-— the pads fuse into the prefill program — and counts them as
-``traced_calls``; eager dispatch outside a trace takes the masked-tail
-staging hot path, whose launch/copy counters
-``engine_dispatch_stats`` surfaces.)  ``warmup()`` AOT-compiles the
-per-bucket prefill programs (warming the engine's attention executables
-through the session) before traffic arrives.
+— the pads fuse into the program, and at a bucket-aligned cache length
+there is nothing to pad — and counts them as ``traced_calls``; eager
+dispatch outside a trace takes the masked-tail staging hot path, whose
+launch/copy counters ``engine_dispatch_stats`` surfaces.)
+
+Decode is the third padding-free serving scenario (after aligned and
+unaligned prefill): the KV cache lives in kv-BUCKET-shaped buffers (the
+decode-attention workload's own bucket set — the same kv buckets prefill
+streams), each step runs exactly ONE AOT decode program for the current
+(batch-bucket, kv-bucket) pair, and the cache grows IN PLACE by
+``dynamic_update_slice`` — the new token's K/V row lands in the bucket
+buffer, nothing re-stages per token.  Rows past ``pos`` are dead weight
+the kv_len mask never reads.  When ``pos`` outgrows the bucket, the cache
+is copied once into the next bucket's buffers (amortized-doubling growth,
+so the reachable bucket chain stays logarithmic); ``decode_stats`` (a
+DispatchStats) counts launches per token, growth copies and pad
+fallbacks (always 0) — surfaced by ``engine_dispatch_stats()`` under
+``decode_step``.  ``warmup()`` AOT-compiles the per-bucket prefill AND
+decode programs (warming the engine's attention executables through the
+session) before traffic arrives.
 
 ``python -m repro.launch.serve --arch paper-gpt2-124m --smoke --requests 16``
 """
@@ -32,13 +46,16 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GemmWorkload
+from repro.core import DecodeAttentionWorkload, GemmWorkload
+from repro.core.engine import DispatchStats
 from repro.launch.mesh import make_host_mesh
+from repro.models.model import abstract_cache
 from repro.models.params import init_params
 from repro.models.partitioning import make_rules
 from repro.models.registry import get_config, get_smoke_config
@@ -94,17 +111,31 @@ class VortexServer:
         self._seq_op = CompiledOp(engine, engine.kernel_for(
             GemmWorkload(M=None, N=cfg.d_model, K=cfg.d_model)
         ))
-        # ONE jit for prefill; buckets are AOT lowered+compiled through it,
-        # so each bucket pays exactly one real compilation and the stats
-        # count compilations, not wrapper constructions.
-        self._prefill_jit = jax.jit(
-            make_prefill_step(cfg, self.rules, max_cache)
-        )
+        # The cache dim's bucket source: the decode-attention workload over
+        # the model's head_dim — its kv buckets (== the kv buckets prefill
+        # attention streams, see DecodeAttentionWorkload) are the cache
+        # lengths the decode programs are compiled at.
+        self._decode_op = CompiledOp(engine, engine.kernel_for(
+            DecodeAttentionWorkload(seq=None, head_dim=cfg.resolved_head_dim)
+        ))
+        # ONE jit per program family; buckets are AOT lowered+compiled
+        # through it, so each bucket pays exactly one real compilation and
+        # the stats count compilations, not wrapper constructions.
+        # Prefill jits are keyed by the emitted cache length (= the kv
+        # bucket covering the seq bucket), decode jits by the cache length
+        # they serve.
+        self._prefill_jits: dict[int, Any] = {}
         self._prefill_exec: dict[tuple[int, int], jax.stages.Compiled] = {}
-        self._decode = jax.jit(
-            make_decode_step(cfg, self.rules, cache_len=max_cache)
-        )
-        self.stats = {"prefill_compiles": 0, "bucket_hits": 0}
+        self._decode_jits: dict[int, Any] = {}
+        self._decode_exec: dict[tuple[int, int], jax.stages.Compiled] = {}
+        self.stats = {
+            "prefill_compiles": 0, "bucket_hits": 0,
+            "decode_compiles": 0, "decode_bucket_hits": 0,
+        }
+        # Per-token decode accounting (the padding-free decode contract):
+        # one launch per token, zero pad fallbacks, a stage copy only when
+        # the cache grows into the next kv bucket.
+        self.decode_stats = DispatchStats()
 
     # -- engine-owned bucketing ---------------------------------------------
 
@@ -126,6 +157,38 @@ class VortexServer:
         m_max = self.max_cache if m_max is None else min(m_max, self.max_cache)
         return sorted({min(b, self.max_cache)
                        for b in self._seq_op.buckets(m_max)})
+
+    # -- decode kv buckets --------------------------------------------------
+
+    def kv_bucket(self, n: int) -> int:
+        """The decode cache length covering ``n`` valid rows: the
+        decode-attention workload's own kv bucket, capped by max_cache."""
+        return min(self._decode_op.bucket(n), self.max_cache)
+
+    def _grown_kv_bucket(self, kvb: int, needed: int) -> int:
+        """The next cache length once ``needed`` rows outgrow ``kvb``:
+        amortized doubling quantized to a kv bucket, so a long generation
+        pays O(log) growth copies and the reachable bucket chain (what
+        warmup must precompile) stays logarithmic — not one decode program
+        per lattice breakpoint."""
+        return self.kv_bucket(max(needed, 2 * kvb))
+
+    def decode_buckets(
+        self, *, m_max: int | None = None, max_new: int = 0
+    ) -> list[int]:
+        """Every cache length decode can run at for prompts up to
+        ``m_max`` generating up to ``max_new`` tokens: the prefill-emitted
+        buckets plus their doubling-growth chains."""
+        m_max = self.max_cache if m_max is None else min(m_max, self.max_cache)
+        out: set[int] = set()
+        for sp in self.seq_buckets(m_max):
+            kvb = self.kv_bucket(sp)
+            out.add(kvb)
+            limit = min(sp + max(max_new, 0), self.max_cache)
+            while kvb < limit:
+                kvb = self._grown_kv_bucket(kvb, kvb + 1)
+                out.add(kvb)
+        return sorted(out)
 
     # -- compiled-program cache ---------------------------------------------
 
@@ -151,27 +214,101 @@ class VortexServer:
         key = (bp, sp)
         exe = self._prefill_exec.get(key)
         if exe is None:
-            # Lower under the engine session: causal prefill attention
-            # inside the model dispatches through the engine
+            # Lower under the engine session: prefill attention inside the
+            # model dispatches through the engine
             # (models/layers.attn_forward consults installed_engine()), so
             # the traced program embeds lattice-selected attention blocks
             # and the engine's executable cache is warmed at trace time.
+            # The emitted cache is ALREADY kv-bucket shaped: decode starts
+            # on the aligned path with zero copies.
+            cache_len = self.kv_bucket(sp)
+            pj = self._prefill_jits.get(cache_len)
+            if pj is None:
+                pj = jax.jit(make_prefill_step(self.cfg, self.rules, cache_len))
+                self._prefill_jits[cache_len] = pj
             with self.engine.use():
-                exe = self._prefill_jit.lower(self.params, batch).compile()
+                exe = pj.lower(self.params, batch).compile()
             self._prefill_exec[key] = exe
             self.stats["prefill_compiles"] += 1
         else:
             self.stats["bucket_hits"] += 1
         return exe
 
-    def warmup(self, *, max_batch: int = 1, m_max: int | None = None) -> int:
+    def _decode_exec_for(self, bp: int, kvb: int) -> "jax.stages.Compiled":
+        """The ONE AOT decode program for a (batch-bucket, cache-length)
+        pair.  Lowering runs under the engine session: the in-model decode
+        attention dispatches through the kv_len-masked decode workload at
+        the bucket-aligned cache length, so the compiled step embeds the
+        lattice-selected kv block and runs pad-free."""
+        key = (bp, kvb)
+        exe = self._decode_exec.get(key)
+        if exe is None:
+            dj = self._decode_jits.get(kvb)
+            if dj is None:
+                dj = jax.jit(
+                    make_decode_step(self.cfg, self.rules, cache_len=kvb)
+                )
+                self._decode_jits[kvb] = dj
+            with self.engine.use():
+                exe = dj.lower(
+                    self.params,
+                    abstract_cache(self.cfg, bp, kvb),
+                    jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                ).compile()
+            self._decode_exec[key] = exe
+            self.stats["decode_compiles"] += 1
+        else:
+            self.stats["decode_bucket_hits"] += 1
+        return exe
+
+    # Which axis of each cache leaf is the cache-length dim (leaves carry a
+    # leading stacked-groups axis); mamba state and encoder_out never grow.
+    _CACHE_SEQ_AXIS = {"k": 3, "v": 3, "ckv": 2, "k_rope": 2}
+
+    def _grow_cache(self, cache: dict, new_len: int) -> dict:
+        """Copy the cache into ``new_len``-long bucket buffers: ONE
+        O(true-size) ``dynamic_update_slice`` per growing leaf, only at
+        bucket transitions — never per token.  The grown tail is zeroed
+        (MLA's absorbed decode masks scores but not 0*garbage in its PV
+        contraction; attention leaves would tolerate garbage via kv_len)."""
+        st = self.decode_stats
+
+        def grow_entry(entry: dict) -> dict:
+            out = {}
+            for name, leaf in entry.items():
+                ax = self._CACHE_SEQ_AXIS.get(name)
+                if ax is None or leaf.shape[ax] >= new_len:
+                    out[name] = leaf
+                    continue
+                shape = list(leaf.shape)
+                shape[ax] = new_len
+                buf = jnp.zeros(tuple(shape), leaf.dtype)
+                out[name] = jax.lax.dynamic_update_slice(
+                    buf, leaf, (0,) * leaf.ndim
+                )
+                st.stage_copies += 1
+            return out
+
+        return {
+            key: entry if key == "encoder_out" else grow_entry(entry)
+            for key, entry in cache.items()
+        }
+
+    def warmup(
+        self, *, max_batch: int = 1, m_max: int | None = None,
+        max_new: int = 8,
+    ) -> int:
         """Precompile before traffic: AOT compile the prefill program for
-        every (batch-bucket, seq-bucket) pair up to ``max_batch``/``m_max``.
-        The bucket set is the engine's own (CompiledOp.buckets), and each
-        AOT compile warms the engine's attention executables through the
-        session (see _prefill_exec_for) — ``generate`` pads every prompt to
-        one of these buckets first, so this covers exactly the executables
-        serving will hit.  Returns the number of prefill programs compiled.
+        every (batch-bucket, seq-bucket) pair up to ``max_batch``/``m_max``
+        AND the decode program for every cache length those prompts can
+        reach within ``max_new`` generated tokens (the doubling-growth
+        bucket chains — see ``decode_buckets``).  The bucket sets are the
+        engine's own (CompiledOp.buckets), and each AOT compile warms the
+        engine's attention executables through the session — ``generate``
+        pads every prompt to one of these buckets first, so this covers
+        exactly the executables serving will hit.  Returns the number of
+        programs compiled (prefill + decode).
 
         Direct-op serving (no model in between) warms with
         ``CompiledOp.precompile`` instead — see DESIGN.md §6."""
@@ -183,30 +320,52 @@ class VortexServer:
                 if (bp, sp) not in self._prefill_exec:
                     self._prefill_exec_for(bp, sp, self._make_batch(bp, sp))
                     compiled += 1
+            for kvb in self.decode_buckets(m_max=m_max, max_new=max_new):
+                if (bp, kvb) not in self._decode_exec:
+                    self._decode_exec_for(bp, kvb)
+                    compiled += 1
             if bp >= pow2_bucket(max_batch):
                 break
             bp *= 2
         return compiled
 
     def engine_dispatch_stats(self) -> dict[str, dict]:
-        """Per-kind hot-path accounting from the engine session: launches,
+        """Per-kind hot-path accounting from the engine session — launches,
         staging/unstaging copies, aligned vs unaligned calls, and how many
-        calls ran padded (trace-time lowering).  The padding-free serving
-        contract in one dict — what ops dashboards should scrape."""
+        calls ran padded (trace-time lowering) — PLUS the server's own
+        per-token decode accounting under ``decode_step`` (the decode
+        programs run outside the engine's eager dispatch, so their
+        launches are counted here: one per token, a stage copy per cache
+        growth, padded always 0).  The padding-free serving contract in
+        one dict — what ops dashboards should scrape."""
         keep = (
             "calls", "launches", "aligned_calls", "unaligned_calls",
             "stage_copies", "unstage_copies", "padded_calls",
             "traced_calls",
         )
-        return {
+        out = {
             kind: {k: s[k] for k in keep}
             for kind, s in self.engine.stats().items()
         }
+        d = self.decode_stats.as_dict()
+        out["decode_step"] = {k: d[k] for k in keep}
+        return out
 
     # -- serving ------------------------------------------------------------
 
     def generate(self, req: Request) -> np.ndarray:
         b, s = req.tokens.shape
+        if s + req.max_new - 1 > self.max_cache:
+            # Refuse loudly: past the cap the cache cannot grow, the
+            # in-program dynamic_update_slice would clamp its start and
+            # silently stomp the last KV row — corrupted logits with no
+            # signal.  (The pre-bucketed server had the same overflow and
+            # hid it; the bucket contract makes it checkable.)
+            raise ValueError(
+                f"prompt_len {s} + max_new {req.max_new} needs "
+                f"{s + req.max_new - 1} cache rows > max_cache "
+                f"{self.max_cache}; raise max_cache or shorten the request"
+            )
         bp = self.batch_bucket(b)
         sp = self.seq_bucket(s)
         batch = self._make_batch(bp, sp, req.tokens)
@@ -216,11 +375,22 @@ class VortexServer:
         out = [np.asarray(jnp.argmax(logits, -1))]
         tok = jnp.asarray(out[-1][:, None])
         pos = s - 1
+        kvb = self.kv_bucket(sp)  # the prefill-emitted cache length
+        st = self.decode_stats
         for i in range(req.max_new - 1):
             pos += 1
-            logits, cache = self._decode(
+            needed = pos + 1  # rows the cache must hold after this step
+            st.calls += 1
+            if needed > kvb and kvb < self.max_cache:
+                kvb = self._grown_kv_bucket(kvb, needed)
+                cache = self._grow_cache(cache, kvb)
+                st.unaligned_calls += 1
+            else:
+                st.aligned_calls += 1
+            logits, cache = self._decode_exec_for(bp, kvb)(
                 self.params, cache, tok, jnp.asarray(pos, jnp.int32)
             )
+            st.launches += 1
             nxt = jnp.argmax(logits, -1)
             out.append(np.asarray(nxt))
             tok = nxt[:, None]
@@ -244,8 +414,8 @@ def main() -> None:
     mesh = make_host_mesh()
     server = VortexServer(cfg, mesh, max_cache=256)
     if args.warmup:
-        n = server.warmup(max_batch=8, m_max=64)
-        print(f"warmup: {n} prefill buckets AOT-compiled")
+        n = server.warmup(max_batch=8, m_max=64, max_new=args.max_new)
+        print(f"warmup: {n} prefill+decode buckets AOT-compiled")
     rng = np.random.default_rng(args.seed)
 
     t0 = time.perf_counter()
@@ -262,7 +432,14 @@ def main() -> None:
     print(
         f"{args.requests} dynamic requests in {dt:.1f}s; "
         f"compiles={server.stats['prefill_compiles']} "
-        f"bucket_hits={server.stats['bucket_hits']}"
+        f"bucket_hits={server.stats['bucket_hits']} "
+        f"decode_compiles={server.stats['decode_compiles']} "
+        f"decode_bucket_hits={server.stats['decode_bucket_hits']}"
+    )
+    ds = server.decode_stats
+    print(
+        f"decode: tokens={ds.calls} launches={ds.launches} "
+        f"growth_copies={ds.stage_copies} padded={ds.padded_calls}"
     )
     for kind, d in server.engine_dispatch_stats().items():
         print(

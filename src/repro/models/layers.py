@@ -47,10 +47,11 @@ __all__ = [
 # Vortex autoconfig (core/autoconfig.py picks it from the cost model).
 ATTN_CHUNK = 1024
 
-# Optional vortex-engine routing for the prefill attention path: when a
+# Optional vortex-engine routing for the serving attention paths: when a
 # serving harness installs an Engine session (`with vortex.use(engine):`),
-# causal self-attention at dynamic sequence lengths dispatches through the
-# sample-free bucketed pipeline instead of the inline chunked scan.  The
+# prefill self-attention (causal or not), non-causal encoder attention and
+# single-token decode attention all dispatch through the sample-free
+# bucketed pipeline instead of the inline chunked scan / cache mask.  The
 # steady-state dispatch is constant time: the engine resolves the call site
 # from a raw shape tuple (Workload.dispatch_key) and the selector serves
 # unseen sequence lengths from the offline-materialized breakpoint table
@@ -179,6 +180,7 @@ def _decode_attend(
     # positions — slice them out (static size) instead of scoring the whole
     # cache with a mask.  At 500k context this is a 128x compute/traffic
     # reduction; correctness is preserved by re-basing the position mask.
+    base = 0
     if window is not None and S > 2 * window:
         start = jnp.clip(pos - window + 1, 0, S - window)
         k_cache = jax.lax.dynamic_slice(
@@ -187,10 +189,32 @@ def _decode_attend(
         v_cache = jax.lax.dynamic_slice(
             v_cache, (0, 0, start, 0), (b, hkv, window, v_cache.shape[-1])
         )
+        base = start
         k_pos = start + jnp.arange(window)
         S = window
     else:
         k_pos = jnp.arange(S)
+
+    # Engine-served decode: with a session installed, the single-token
+    # query dispatches through the kv_len-masked decode workload — the
+    # cache is consumed at its (bucketed) length S and the number of valid
+    # rows rides as a runtime scalar, so cache tails past the last written
+    # token may hold ANYTHING (bucket pad, stale bytes) and the selection
+    # is static (S), trace-safe.  The inline math below remains the
+    # bit-identical fallback for sessionless callers (training harnesses,
+    # sharded decode) and for the rare shapes the workload does not cover
+    # (MLA-style dv != hd, a non-default scale).
+    engine = session.installed_engine()
+    if (
+        engine is not None
+        and v_cache.shape[-1] == hd
+        and abs(scale - hd ** -0.5) < 1e-12
+    ):
+        kv_len = pos - base + 1  # valid rows in (the slice of) the cache
+        return engine.dispatch(
+            "decode_attention", q, k_cache, v_cache, kv_len,
+            window=window, softcap=softcap,
+        ).astype(q.dtype)
 
     # GQA without materializing repeated K/V: fold the group into q's head
     # layout (b, KV, group, 1, hd) and contract against (b, KV, S, hd).
@@ -376,13 +400,19 @@ def attn_forward(
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         engine = session.installed_engine()
-        if engine is not None and causal and mode == "prefill":
+        if engine is not None and (mode == "prefill" or not causal):
             # Dynamic-seq serving path: the session engine selects
             # (block_q, block_k) from the scored lattice for this runtime
             # seq, pads to the induced bucket, and serves from the bounded
-            # executable cache.
+            # executable cache.  Routed calls: ALL prefill self-attention
+            # (causal or not) and non-causal encoder self-attention — the
+            # whisper/internvl encoders run their bidirectional stacks in
+            # "train" mode even while serving, so the non-causal arm is
+            # what puts them on the engine.  Causal train-mode attention
+            # stays inline (sessions are serving-scoped; training wants
+            # the sharding pins of the chunked scan).
             out = engine.dispatch(
-                "attention", q, k, v, causal=True, window=spec.window,
+                "attention", q, k, v, causal=causal, window=spec.window,
                 softcap=cfg.attn_softcap,
             )
         else:

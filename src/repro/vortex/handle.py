@@ -71,8 +71,11 @@ class CompiledOp:
         return self._kernel.select(m)
 
     def bucket(self, m: int) -> int:
-        """The padded dynamic extent an extent of ``m`` is served at."""
-        return self._kernel.select(max(m, 1)).padded_m
+        """The padded dynamic extent an extent of ``m`` is served at
+        (``Workload.dynamic_bucket`` of the Selection: padded_m for
+        GEMM-view workloads, the kv bucket for decode attention)."""
+        sel = self._kernel.select(max(m, 1))
+        return self._kernel.workload.dynamic_bucket(sel)
 
     def buckets(self, m_max: int) -> list[int]:
         """All distinct padded extents reachable for m in [1, m_max]."""

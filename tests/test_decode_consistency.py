@@ -1,7 +1,19 @@
 """Prefill+decode must reproduce the full-forward logits (KV-cache, MLA
 absorbed decode, mamba recurrent state, sliding windows, cross-attention).
 MoE archs are tested with a no-drop capacity factor, since capacity dropping
-legitimately perturbs train-mode outputs."""
+legitimately perturbs train-mode outputs.
+
+De-flaked (ISSUE 5): the per-arch sweep runs in float32, where the only
+nondeterminism left (XLA's threaded reduction order under CPU contention)
+is ~1e-6 relative — far under the gate — so the comparison is strict and
+deterministic; the historical bf16 run, whose tolerance cliff made the p90
+gate contention-sensitive, is kept as ONE smoke behind the ``contention``
+marker (deselected from tier-1 via pyproject addopts).  The engine-side
+decode determinism claim — same kv bucket => same executable — is asserted
+structurally from DispatchStats/cache_info in
+``test_decode_bucket_identity`` (and differentially in
+tests/test_decode_engine.py), not from wall-clock-sensitive numerics.
+"""
 import dataclasses
 
 import jax
@@ -34,15 +46,7 @@ def _no_drop(cfg):
     )
 
 
-@pytest.mark.parametrize("arch", ARCHS)
-def test_decode_matches_full_forward(arch, mesh):
-    cfg = _no_drop(get_smoke_config(arch))
-    rules = make_rules(
-        mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads
-    )
-    key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
-    b, prefill_len, extra = 2, 32, 3
+def _decode_inputs(cfg, key, b=2, prefill_len=32, extra=3):
     total = prefill_len + extra
     tokens = jax.random.randint(key, (b, total), 0, cfg.vocab)
     kw = {}
@@ -54,50 +58,102 @@ def test_decode_matches_full_forward(arch, mesh):
         kw["encoder_frames"] = jax.random.normal(
             key, (b, cfg.encoder_seq, cfg.d_model)
         ).astype(jnp.dtype(cfg.dtype))
+    return tokens, total, kw
+
+
+def _run_decode_vs_full(cfg, mesh, gate):
+    """Decode the last tokens one by one against the train-mode logits,
+    calling ``gate(full_logits_at_pos, decode_logits)`` per step."""
+    rules = make_rules(mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    prefill_len, extra = 32, 3
+    tokens, total, kw = _decode_inputs(cfg, key, 2, prefill_len, extra)
 
     full, _, _ = M.forward(cfg, rules, params, tokens, mode="train", **kw)
     _, cache, _ = M.forward(
         cfg, rules, params, tokens[:, :prefill_len], mode="prefill",
         cache_len=total, **kw,
     )
+    for i in range(extra):
+        pos = prefill_len + i
+        dec, cache, _ = M.forward(
+            cfg, rules, params, tokens[:, pos: pos + 1], mode="decode",
+            cache=cache, pos=jnp.asarray(pos, jnp.int32), cache_len=total,
+        )
+        gate(full[:, pos], dec[:, 0], pos)
 
-    def _gate(full_logits, dec_logits, pos):
-        """bf16 end-to-end through up-to-8-layer stacks: typical rel-err
-        is ~1e-2.  Gate what a real decode/cache bug would actually move:
-        the TYPICAL error (90th percentile — a genuine mismatch perturbs
-        most logits) strictly, and severe outliers only as a fraction."""
-        a = np.asarray(full_logits[:, pos], np.float32)
-        b_ = np.asarray(dec_logits[:, 0], np.float32)
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch, mesh):
+    """float32 end-to-end: the comparison is deterministic, so the gate is
+    strict — a real decode/cache bug moves logits by orders of magnitude
+    more than f32 reduction-order noise."""
+    cfg = dataclasses.replace(
+        _no_drop(get_smoke_config(arch)), dtype="float32"
+    )
+
+    def gate(full_pos, dec, pos):
+        a = np.asarray(full_pos, np.float32)
+        b_ = np.asarray(dec, np.float32)
+        err = np.abs(a - b_) / (np.max(np.abs(a)) + 1e-9)
+        assert float(np.max(err)) < 2e-3, (arch, pos, float(np.max(err)))
+
+    _run_decode_vs_full(cfg, mesh, gate)
+
+
+@pytest.mark.contention
+def test_decode_matches_full_forward_bf16_smoke(mesh):
+    """The historical bf16 comparison for ONE arch: its p90/severe gate is
+    contention-sensitive on shared CPUs (threaded bf16 reductions reorder),
+    so it lives behind the ``contention`` marker as an opt-in timing smoke
+    (`pytest -m contention`), out of tier-1."""
+    cfg = _no_drop(get_smoke_config("paper-gpt2-124m"))
+
+    def gate(full_pos, dec, pos):
+        a = np.asarray(full_pos, np.float32)
+        b_ = np.asarray(dec, np.float32)
         err = np.abs(a - b_) / (np.max(np.abs(a)) + 1e-9)
         p90 = float(np.percentile(err, 90))
         severe = float(np.mean(err > 0.25))
-        return (p90 < 0.03 and severe < 0.02), (p90, severe)
+        assert p90 < 0.03 and severe < 0.02, (pos, p90, severe)
 
-    # Decode the remaining tokens one by one; each must match the parallel
-    # (train-mode) logits at that position.
-    for i in range(extra):
-        pos = prefill_len + i
-        step_args = (cfg, rules, params, tokens[:, pos: pos + 1])
-        step_kw = dict(
-            mode="decode", cache=cache, pos=jnp.asarray(pos, jnp.int32),
-            cache_len=total,
+    _run_decode_vs_full(cfg, mesh, gate)
+
+
+def test_decode_bucket_identity():
+    """Deterministic replacement for wall-clock decode gating: every
+    decode dispatch at the SAME cache length serves from the SAME compiled
+    executable (no per-kv_len growth), asserted from DispatchStats and the
+    executable cache — and a different kv bucket adds exactly one."""
+    from repro.vortex import Engine
+
+    eng = Engine("host_cpu", empirical_levels=())
+    rng = np.random.default_rng(0)
+
+    def args(S, kv_len):
+        return (
+            jnp.asarray(rng.normal(size=(1, 4, 1, 32)), jnp.float32),
+            jnp.asarray(rng.normal(size=(1, 2, S, 32)), jnp.float32),
+            jnp.asarray(rng.normal(size=(1, 2, S, 32)), jnp.float32),
+            kv_len,
         )
-        dec, cache, _ = M.forward(*step_args, **step_kw)
-        ok, stats = _gate(full, dec, pos)
-        if not ok:
-            # Under heavy CPU contention XLA's threaded reductions can
-            # reorder and blow up a FEW logits by large margins on either
-            # side of the comparison (documented pre-existing flake).
-            # Such blowups are nondeterministic per execution, while a
-            # real decode bug reproduces — so recompute both sides once
-            # before declaring failure (caches are functional values, the
-            # re-run is side-effect-free).
-            full_retry, _, _ = M.forward(
-                cfg, rules, params, tokens, mode="train", **kw
-            )
-            dec, cache, _ = M.forward(*step_args, **step_kw)
-            ok, stats = _gate(full_retry, dec, pos)
-        assert ok, (arch, i, stats)
+
+    kern = eng.op_kernel("decode_attention", args(8, 8), {})
+    S = kern.workload.dynamic_bucket(kern.select(64))  # a bucket length
+    for kv_len in range(1, S + 1, max(S // 7, 1)):
+        eng.dispatch("decode_attention", *args(S, kv_len))
+    d = eng.stats()["decode_attention"]
+    assert d["launches"] == d["calls"], "one launch per decode step"
+    assert d["padded_calls"] == 0
+    assert d["exec_entries"] == 1, (
+        "same kv bucket must serve every kv_len from ONE executable"
+    )
+    # Crossing into another bucket compiles exactly one more program.
+    S2 = kern.workload.dynamic_bucket(kern.select(S + 1))
+    assert S2 > S
+    eng.dispatch("decode_attention", *args(S2, S + 1))
+    assert eng.stats()["decode_attention"]["exec_entries"] == 2
 
 
 def test_windowed_decode_ignores_out_of_window(mesh):

@@ -1,0 +1,165 @@
+"""Non-causal encoder attention on the engine (ISSUE 5 satellite).
+
+The whisper/internvl encoder stacks run bidirectional self-attention
+(``attn_forward(causal=False)``) — with PR 4's kv_len masking the causal
+structure is no longer load-bearing for bucketing, so a session routes
+them through the engine too.  These tests assert (a) engine dispatch
+actually occurs (DispatchStats delta) and (b) the outputs match the
+sessionless inline path bit-for-bit at fully-aligned single-chunk
+sequence lengths (where both paths reduce to the identical oracle on the
+identical buffers — any difference would be a routing bug, not float
+noise), plus to tight tolerance at arbitrary lengths.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.models import model as M
+from repro.models.config import LayerSpec
+from repro.models.layers import attn_forward
+from repro.models.params import init_params
+from repro.models.partitioning import make_rules
+from repro.models.registry import get_smoke_config
+from repro.vortex import Engine, use
+
+ARCHS = ["whisper-small", "internvl2-26b"]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _encoder_weights(cfg, rng):
+    """A GQA attention parameter set shaped like the model's own."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def w(shape):
+        return jnp.asarray(rng.normal(size=shape) * 0.05, jnp.float32)
+
+    return {
+        "wq": w((d, H * hd)),
+        "wk": w((d, KV * hd)),
+        "wv": w((d, KV * hd)),
+        "wo": w((H * hd, d)),
+    }
+
+
+def _bitwise_seqs(engine, cfg, limit=64) -> list[int]:
+    """Sequence lengths where the engine path is the IDENTICAL program to
+    the inline path: fully aligned bucket (no staging, no padding) and a
+    single kv chunk (no online-softmax re-ordering)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.zeros((1, cfg.n_heads, 8, hd))
+    kv = jnp.zeros((1, cfg.n_kv_heads, 8, hd))
+    kern = engine.op_kernel(
+        "attention", (q, kv, kv),
+        {"causal": False, "window": None, "softcap": cfg.attn_softcap},
+    )
+    out = []
+    for s in range(1, limit + 1):
+        sel = kern.select(s)
+        if sel.bucket[0] == s and sel.bucket[2] == s and sel.grid[2] == 1:
+            out.append(s)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_encoder_attn_forward_engine_parity(arch, mesh):
+    """attn_forward(causal=False) with a session: dispatch occurs (stats
+    delta) and outputs are bit-for-bit at aligned single-chunk lengths."""
+    cfg = get_smoke_config(arch)
+    rules = make_rules(mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads)
+    rng = np.random.default_rng(5)
+    p = _encoder_weights(cfg, rng)
+    spec = LayerSpec(mixer="attn", mlp="dense")  # the encoder's own spec
+    eng = Engine("host_cpu", empirical_levels=())
+    seqs = _bitwise_seqs(eng, cfg)
+    assert seqs, "no aligned single-chunk seq found for bitwise parity"
+
+    for s in seqs[-2:]:
+        x = jnp.asarray(rng.normal(size=(2, s, cfg.d_model)) * 0.1,
+                        jnp.float32)
+        kw = dict(
+            mode="prefill", positions=jnp.arange(s), cache_len=s,
+            causal=False, use_rope=cfg.use_rope,
+        )
+        inline, _ = attn_forward(p, x, cfg, spec, rules, **kw)
+        before = eng.stats().get("attention", {}).get("launches", 0)
+        with use(eng):
+            routed, _ = attn_forward(p, x, cfg, spec, rules, **kw)
+        after = eng.stats()["attention"]
+        assert after["launches"] == before + 1, "engine dispatch must occur"
+        assert after["padded_calls"] == 0
+        np.testing.assert_array_equal(
+            np.asarray(routed), np.asarray(inline),
+            err_msg=f"{arch}: engine path differs bitwise at seq {s}",
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_encoder_attn_forward_engine_close_at_unaligned_seq(arch, mesh):
+    """At an arbitrary (staged, multi-chunk) length the routed path stays
+    within float accumulation-order tolerance of the inline path."""
+    cfg = get_smoke_config(arch)
+    rules = make_rules(mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads)
+    rng = np.random.default_rng(9)
+    p = _encoder_weights(cfg, rng)
+    spec = LayerSpec(mixer="attn", mlp="dense")
+    s = 27  # prime: unaligned on every lattice
+    x = jnp.asarray(rng.normal(size=(2, s, cfg.d_model)) * 0.1, jnp.float32)
+    kw = dict(
+        mode="prefill", positions=jnp.arange(s), cache_len=s,
+        causal=False, use_rope=cfg.use_rope,
+    )
+    inline, _ = attn_forward(p, x, cfg, spec, rules, **kw)
+    eng = Engine("host_cpu", empirical_levels=())
+    with use(eng):
+        routed, _ = attn_forward(p, x, cfg, spec, rules, **kw)
+    assert eng.stats()["attention"]["launches"] == 1
+    np.testing.assert_allclose(
+        np.asarray(routed), np.asarray(inline), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_model_prefill_with_engine_routes_encoder(arch, mesh):
+    """Whole-model prefill under a session: the encoder's non-causal
+    attention dispatches through the engine at trace time (traced_calls
+    delta) and the logits match the sessionless forward bit-for-bit."""
+    cfg = get_smoke_config(arch)
+    rules = make_rules(mesh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    b, s = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    kw = {}
+    if cfg.vision_prefix:
+        kw["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vision_prefix, cfg.d_model)),
+            jnp.dtype(cfg.dtype),
+        )
+    if cfg.encoder_decoder:
+        kw["encoder_frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)),
+            jnp.dtype(cfg.dtype),
+        )
+    logits0, _, _ = M.forward(
+        cfg, rules, params, toks, mode="prefill", cache_len=32, **kw
+    )
+    eng = Engine("host_cpu", empirical_levels=())
+    with use(eng):
+        logits1, _, _ = M.forward(
+            cfg, rules, params, toks, mode="prefill", cache_len=32, **kw
+        )
+    st = eng.stats()["attention"]
+    # Both the causal decoder prefill and (for whisper) the non-causal
+    # encoder route; lax.scan bodies trace once => small fixed counts.
+    assert st["traced_calls"] >= (2 if cfg.encoder_decoder else 1)
+    np.testing.assert_array_equal(
+        np.asarray(logits0, np.float32), np.asarray(logits1, np.float32),
+        err_msg=f"{arch}: engine-routed forward differs from inline",
+    )

@@ -55,6 +55,11 @@ def _attn_args(m):
     return (_arr((2, 4, m, 32)), _arr((2, 2, m, 32)), _arr((2, 2, m, 32)))
 
 
+def _decode_args(m):
+    # One query row against a cache of length m; all m rows valid.
+    return (_arr((2, 4, 1, 32)), _arr((2, 2, m, 32)), _arr((2, 2, m, 32)), m)
+
+
 def _conv_args(m):
     return (_arr((1, 1, m, 5)), _arr((1, 1, 5, 7)))
 
@@ -62,12 +67,14 @@ def _conv_args(m):
 KIND_CASES = [
     ("gemm", {}, _gemm_args),
     ("attention", {}, _attn_args),
+    ("decode_attention", {}, _decode_args),
     ("conv2d", {}, _conv_args),
 ]
 
 
 def _probe_extents(kern) -> list[int]:
-    bucket = kern.select(257).padded_m
+    sel = kern.select(257)
+    bucket = kern.workload.dynamic_bucket(sel)
     prime = 263
     return sorted({1, bucket - 1, bucket, bucket + 1, prime})
 
@@ -100,16 +107,17 @@ def test_poisoned_staging_buffers_do_not_leak(engine, kind, params, make):
     WHOLE buffer — staging then overwrites only the true extent) and assert
     the outputs are unaffected: correctness is the kernel's masking."""
     kern = engine.op_kernel(kind, make(8), params)
-    bucket = kern.select(257).padded_m
+    bucket = kern.workload.dynamic_bucket(kern.select(257))
     m = bucket - 1  # unaligned: staging buffers are in play
     args = make(m)
     padded = np.asarray(kern.call_padded(*args))
     np.testing.assert_array_equal(np.asarray(kern(*args)), padded)
     poisoned = 0
     for entry in kern._exec_cache.values():
-        for i, buf in entry.buffers.items():
-            entry.buffers[i] = jnp.full_like(buf, jnp.nan)
-            poisoned += 1
+        for bufs in entry.pool.retained:
+            for i, buf in bufs.items():
+                bufs[i] = jnp.full_like(buf, jnp.nan)
+                poisoned += 1
     assert poisoned >= 1, "unaligned dispatch must have created buffers"
     again = np.asarray(kern(*args))
     assert np.isfinite(again).all(), f"{kind}: NaN poison leaked"
@@ -139,6 +147,14 @@ def test_unaligned_dispatch_is_one_launch_plus_boundary_copies():
     assert d["stage_copies"] == 3  # q, k and v all stage
     assert d["padded_calls"] == 0
 
+    qd, kd, vd, kv_len = _decode_args(37)
+    eng.dispatch("decode_attention", qd, kd, vd, kv_len)
+    d = eng.stats()["decode_attention"]
+    assert d["launches"] == 1
+    assert d["stage_copies"] == 2  # only the k/v cache buffers stage
+    assert d["unstage_copies"] == 0  # out is (b, h, 1, d): nothing to slice
+    assert d["padded_calls"] == 0
+
 
 def test_aligned_dispatch_is_one_launch_zero_copies():
     eng = Engine("host_cpu", empirical_levels=())
@@ -152,18 +168,65 @@ def test_aligned_dispatch_is_one_launch_zero_copies():
 
 
 def test_staging_buffers_are_reused_not_reallocated():
-    """Two unaligned calls in the same bucket reuse ONE engine-owned buffer
-    (donated in place), and the executable cache does not grow."""
+    """Two sequential unaligned calls in the same bucket reuse ONE pooled
+    engine-owned buffer set (donated in place), and the executable cache
+    does not grow."""
     eng = Engine("host_cpu", empirical_levels=())
     kern = eng.op_kernel("gemm", _gemm_args(8), {})
     bucket = kern.select(257).padded_m
+
+    def pool_sets():
+        return sum(len(e.pool.retained) for e in kern._exec_cache.values())
+
     kern(*_gemm_args(bucket - 1))
     entries = len(kern._exec_cache)
-    buffers = sum(len(e.buffers) for e in kern._exec_cache.values())
+    assert pool_sets() == 1
     kern(*_gemm_args(bucket - 2))
     assert len(kern._exec_cache) == entries
-    assert sum(len(e.buffers) for e in kern._exec_cache.values()) == buffers
+    assert pool_sets() == 1  # the set was checked out, reused, returned
     assert kern.dispatch_stats.stage_copies == 2
+
+
+def test_concurrent_same_bucket_dispatch_no_cross_talk():
+    """N threads hammering ONE bucket concurrently: every output must be
+    bit-identical to its own sequential reference — a shared/serialized
+    staging buffer would interleave tenants' rows — and the pool retains
+    at most its cap of buffer sets afterwards."""
+    import threading
+
+    eng = Engine("host_cpu", empirical_levels=())
+    kern = eng.op_kernel("gemm", _gemm_args(8), {})
+    bucket = kern.select(257).padded_m
+    m = bucket - 3
+    b = _arr((96, 80))
+    inputs = [
+        jnp.asarray(
+            np.random.default_rng(100 + i).normal(size=(m, 96)), jnp.float32
+        )
+        for i in range(8)
+    ]
+    kern(inputs[0], b)  # warm: compile once, outside the threads
+    expected = [np.asarray(kern.call_padded(a, b)) for a in inputs]
+
+    failures: list = []
+
+    def worker(idx: int):
+        for _ in range(16):
+            out = np.asarray(kern(inputs[idx], b))
+            if not np.array_equal(out, expected[idx]):
+                failures.append(idx)
+                return
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(len(inputs))
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not failures, f"cross-talk detected for tenants {failures}"
+    for entry in kern._exec_cache.values():
+        assert len(entry.pool.retained) <= entry.pool.cap
 
 
 def test_tracer_context_falls_back_to_functional_path():

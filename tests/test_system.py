@@ -150,13 +150,16 @@ def test_server_buckets_are_engine_selector_buckets(mesh):
 
 def test_server_warmup_precompiles_buckets(mesh):
     """After warmup, in-range requests are all bucket hits: zero prefill
-    compilations at serving time."""
+    AND zero decode compilations at serving time."""
     from repro.launch.serve import Request, VortexServer
 
     cfg = get_smoke_config("paper-gpt2-124m")
     server = VortexServer(cfg, mesh, max_cache=64)
-    n = server.warmup(max_batch=2, m_max=64)
-    assert n == server.stats["prefill_compiles"] > 0
+    n = server.warmup(max_batch=2, m_max=64, max_new=4)
+    n_prefill = server.stats["prefill_compiles"]
+    n_decode = server.stats["decode_compiles"]
+    assert n == n_prefill + n_decode
+    assert n_prefill > 0 and n_decode > 0
     rng = np.random.default_rng(3)
     for (b, s) in [(1, 5), (2, 17), (1, 33)]:
         out = server.generate(Request(
@@ -164,4 +167,5 @@ def test_server_warmup_precompiles_buckets(mesh):
             max_new=2,
         ))
         assert out.shape == (b, 2)
-    assert server.stats["prefill_compiles"] == n  # nothing new compiled
+    assert server.stats["prefill_compiles"] == n_prefill  # nothing new
+    assert server.stats["decode_compiles"] == n_decode
