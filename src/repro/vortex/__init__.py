@@ -58,6 +58,7 @@ __all__ = [
     "CompiledOp",
     "Engine",
     "EngineConfig",
+    "LazyBucket",
     "VortexDeprecationWarning",
     "WORKLOADS",
     "Workload",
@@ -65,6 +66,7 @@ __all__ = [
     "current_engine",
     "default_engine",
     "installed_engine",
+    "lazy_map",
     "make_workload",
     "ops",
     "pow2_bucket",
@@ -77,6 +79,8 @@ _LAZY: dict[str, tuple[str, str | None]] = {
     "CompiledOp": ("repro.vortex.handle", "CompiledOp"),
     "Engine": ("repro.vortex.engine", "Engine"),
     "EngineConfig": ("repro.vortex.config", "EngineConfig"),
+    "LazyBucket": ("repro.core.engine", "LazyBucket"),
+    "lazy_map": ("repro.core.engine", "lazy_map"),
     "pow2_bucket": ("repro.vortex.engine", "pow2_bucket"),
     "ops": ("repro.vortex.ops", None),
     "WORKLOADS": ("repro.core.workloads", "WORKLOADS"),

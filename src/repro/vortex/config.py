@@ -41,6 +41,11 @@ class EngineConfig:
       hot path (engine-owned donated bucket buffers + one fused AOT launch,
       DESIGN.md §4).  False forces every call onto the zero-pad reference
       path — a debugging/parity knob, not a serving configuration.
+    * ``staging_pool_cap`` — LRU bound on the staging-buffer sets each
+      executable entry retains (``_StagingPool``): a release beyond the cap
+      evicts the least-recently-used idle set, so burst concurrency can't
+      pin device memory forever.  0 retains nothing (every unaligned call
+      allocates transient buffers); in-flight sets are never evicted.
     """
 
     hardware: str = "host_cpu"
@@ -53,6 +58,7 @@ class EngineConfig:
     table_extend_limit: int = 1 << 17
     precompile_m_max: int = 0
     staging: bool = True
+    staging_pool_cap: int = 4
 
     def __post_init__(self) -> None:
         if self.backends is not None:

@@ -137,6 +137,7 @@ class Engine:
                         table_m_max=cfg.table_m_max,
                         table_extend_limit=cfg.table_extend_limit,
                         staging=cfg.staging,
+                        staging_pool_cap=cfg.staging_pool_cap,
                     )
                     self._kernels[key] = kern
         return kern
@@ -193,11 +194,15 @@ class Engine:
             self._dispatch[key] = kern
         return kern
 
-    def dispatch(self, kind: str, *args: Any, **kwargs: Any):
+    def dispatch(self, kind: str, *args: Any, lazy: bool = False,
+                 **kwargs: Any):
         """Serve one call of a registered workload kind: ``args`` are the
-        runtime arrays, ``kwargs`` the workload parameters (flags/strides).
-        This is what ``vortex.ops.<kind>(...)`` invokes."""
-        return self.op_kernel(kind, args, kwargs)(*args)
+        runtime arrays (or engine :class:`~repro.core.engine.LazyBucket`
+        handles), ``kwargs`` the workload parameters (flags/strides).
+        ``lazy=True`` asks for the output as a LazyBucket handle —
+        best-effort, see ``VortexKernel.__call__``.  This is what
+        ``vortex.ops.<kind>(...)`` invokes."""
+        return self.op_kernel(kind, args, kwargs)(*args, lazy=lazy)
 
     # -- introspection ------------------------------------------------------
 
@@ -242,6 +247,7 @@ class Engine:
                     "aligned_calls": 0, "unaligned_calls": 0,
                     "stage_copies": 0, "unstage_copies": 0,
                     "padded_calls": 0, "traced_calls": 0,
+                    "forwarded": 0, "realize_slices": 0,
                 },
             )
             sstats = kernel.selector.stats

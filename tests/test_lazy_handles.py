@@ -1,0 +1,575 @@
+"""Lazy bucket handles: zero boundary copies across chained engine ops.
+
+Acceptance surface of DESIGN.md §8:
+
+  * :class:`LazyBucket` semantics — true-shape reporting, cached one-slice
+    realization (identity when aligned), shared copy accounting across
+    ``rewrap``/``map``/``clamp``, the ``__jax_array__`` protocol, and
+    ``lazy_map`` compatibility/fallback rules;
+  * forwarding — a dispatch whose operand is a handle in a compatible
+    bucket consumes the raw buffer directly (``forwarded`` counted, zero
+    stage/unstage), with NaN-poisoned pad tails proving the masked-tail
+    contract holds ACROSS op boundaries, for gemm, prefill attention and
+    decode attention (the kv cache consuming k/v projection buffers);
+  * fallbacks stay correct and honestly counted — incompatible buckets
+    restage (stage copy), mixed handle/plain attention realizes, and every
+    path is bit-identical to the eager per-op reference;
+  * whole-model chained prefill (launch/serve.py ``prefill="chained"``) is
+    bit-identical to its eager per-op reference with ZERO interior
+    unstage+restage pairs (boundary copies per block == 0 at a chain-
+    aligned bucket) and at least one forward per block;
+  * the staging pool retains at most ``staging_pool_cap`` idle buffer sets
+    (LRU eviction, MRU reuse) and eviction can never race an in-flight
+    dispatch (checked-out sets are not in the free list).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    DispatchStats,
+    LazyBucket,
+    _StagingPool,
+    lazy_map,
+)
+from repro.core.workloads import GemmWorkload
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import Request, VortexServer
+from repro.models.registry import get_smoke_config
+from repro.vortex import Engine, EngineConfig
+
+RNG = np.random.default_rng(23)
+
+
+def _arr(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+def _delta(before: dict, after: dict) -> dict:
+    return {k: after[k] - before[k] for k in after}
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return Engine("host_cpu", empirical_levels=())
+
+
+# ---------------------------------------------------------------------------
+# LazyBucket unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_handle_reports_true_shape():
+    h = LazyBucket(_arr((8, 5)), 6, 0)
+    assert h.shape == (6, 5)
+    assert h.padded_extent == 8
+    assert not h.is_aligned
+    assert h.ndim == 2
+    assert h.dtype == jnp.float32
+
+
+def test_realize_unaligned_slices_once_and_caches():
+    st = DispatchStats()
+    buf = _arr((8, 5))
+    h = LazyBucket(buf, 6, 0, st)
+    r = h.realize()
+    assert r.shape == (6, 5)
+    assert st.realize_slices == 1
+    assert h.realize() is r  # cached: repeated forcing pays once
+    assert st.realize_slices == 1
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(buf[:6]))
+
+
+def test_realize_aligned_is_identity():
+    st = DispatchStats()
+    buf = _arr((8, 5))
+    h = LazyBucket(buf, 8, 0, st)
+    assert h.realize() is buf
+    assert st.realize_slices == 0
+
+
+def test_jax_array_protocol_forces_realization():
+    buf = _arr((8, 5))
+    h = LazyBucket(buf, 6, 0)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.asarray(h)), np.asarray(buf[:6])
+    )
+
+
+def test_rewrap_shares_copy_accounting():
+    st = DispatchStats()
+    h = LazyBucket(_arr((8, 5)), 8, 0, st)
+    g = h.rewrap(_arr((8, 5)), extent=3)
+    g.realize()
+    assert st.realize_slices == 1  # counted into the ORIGIN's stats
+
+
+def test_map_is_row_local_and_keeps_geometry():
+    st = DispatchStats()
+    buf = _arr((8, 5))
+    h = LazyBucket(buf, 6, 0, st)
+    g = h.map(lambda b: b * 2.0)
+    assert isinstance(g, LazyBucket)
+    assert g.extent == 6 and g.padded_extent == 8
+    np.testing.assert_array_equal(np.asarray(g.buffer), np.asarray(buf * 2))
+    with pytest.raises(ValueError, match="bucket axis"):
+        h.map(lambda b: b[:4])
+
+
+def test_clamp_rebuckets_without_touching_extent():
+    st = DispatchStats()
+    h = LazyBucket(_arr((8, 5)), 6, 0, st)
+    assert h.clamp(8) is h  # identity at the current bucket
+    c = h.clamp(6)
+    assert st.realize_slices == 1  # one counted boundary slice
+    assert c.extent == 6 and c.padded_extent == 6 and c.is_aligned
+    with pytest.raises(ValueError, match="below the true extent"):
+        h.clamp(5)
+
+
+def test_lazy_map_plain_compatible_and_fallback():
+    # No handles: plain application.
+    a, b = _arr((4, 3)), _arr((4, 3))
+    np.testing.assert_array_equal(
+        np.asarray(lazy_map(jnp.add, a, b)), np.asarray(a + b)
+    )
+    # Compatible handles: runs on raw buffers, NaN tails stay confined,
+    # extent is the min of the operands'.
+    st = DispatchStats()
+    b1 = _arr((8, 5)).at[6:].set(np.nan)
+    b2 = _arr((8, 5)).at[4:].set(np.nan)
+    h1 = LazyBucket(b1, 6, 0, st)
+    h2 = LazyBucket(b2, 4, 0, st)
+    out = lazy_map(jnp.add, h1, h2)
+    assert isinstance(out, LazyBucket)
+    assert out.extent == 4 and out.padded_extent == 8
+    got = np.asarray(out.realize())
+    assert not np.isnan(got).any()
+    np.testing.assert_array_equal(got, np.asarray((b1 + b2)[:4]))
+    # Plain operands broadcast against the BUFFER shape (per-feature
+    # weights, row-local).
+    w = _arr((5,))
+    np.testing.assert_array_equal(
+        np.asarray(lazy_map(jnp.multiply, h1, w).buffer),
+        np.asarray(b1 * w),
+    )
+    # Incompatible bucket geometry: realize-everything fallback (counted).
+    before = st.realize_slices
+    h3 = LazyBucket(_arr((4, 5)), 4, 0, st).rewrap(_arr((4, 5)), extent=3)
+    h4 = LazyBucket(_arr((8, 5)), 3, 0, st)
+    out = lazy_map(jnp.add, h3, h4)
+    assert not isinstance(out, LazyBucket)
+    assert out.shape == (3, 5)
+    assert st.realize_slices - before == 2
+    # A fn that changes the bucket axis is a contract violation.
+    with pytest.raises(ValueError, match="bucket axis"):
+        lazy_map(lambda t: t[:4], h1)
+
+
+# ---------------------------------------------------------------------------
+# Forwarding: bucket-to-bucket dispatch
+# ---------------------------------------------------------------------------
+
+
+def _gemm_kern(eng, n, k):
+    return eng.kernel_for(GemmWorkload(M=None, N=n, K=k))
+
+
+def test_gemm_chain_aligned_forwarding_is_bitwise(eng):
+    k1, k2 = _gemm_kern(eng, 64, 96), _gemm_kern(eng, 48, 64)
+    fix = [
+        m for m in range(1, 257)
+        if k1.select(m).padded_m == m and k2.select(m).padded_m == m
+    ]
+    assert fix, "no shared gemm fixpoint <= 256"
+    m = fix[-1]
+    a, w1, w2 = _arr((m, 96)), _arr((96, 64)), _arr((64, 48))
+    ref = k2(k1(a, w1), w2)
+
+    b1 = k1.dispatch_stats.as_dict()
+    b2 = k2.dispatch_stats.as_dict()
+    h = k1(a, w1, lazy=True)
+    assert isinstance(h, LazyBucket) and h.is_aligned and h.extent == m
+    out = k2(h, w2)
+    d2 = _delta(b2, k2.dispatch_stats.as_dict())
+    d1 = _delta(b1, k1.dispatch_stats.as_dict())
+    assert d2["forwarded"] == 1
+    assert d2["aligned_calls"] == 1 and d2["launches"] == 1
+    assert d2["stage_copies"] == 0 and d2["unstage_copies"] == 0
+    assert d1["realize_slices"] == 0  # the handle was never forced
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gemm_forwarding_masks_nan_tail(eng):
+    """A handle whose pad tail is NaN-poisoned forwards bit-identically:
+    the scalars come from the TRUE shape, so the executable never reads
+    past the extent."""
+    k2 = _gemm_kern(eng, 48, 64)
+    fix = [m for m in range(2, 257) if k2.select(m).padded_m == m]
+    assert fix
+    bucket = fix[-1]
+    ms = [m for m in range(bucket - 1, 0, -1)
+          if k2.select(m).padded_m == bucket]
+    assert ms, f"no extent buckets to {bucket}"
+    m = ms[0]
+    w2 = _arr((64, 48))
+    clean = _arr((bucket, 64))
+    poisoned = clean.at[m:].set(np.nan)
+    ref = k2(jnp.asarray(clean[:m]), w2)
+
+    before = k2.dispatch_stats.as_dict()
+    h = LazyBucket(poisoned, m, 0, k2.dispatch_stats)
+    out = k2(h, w2)
+    d = _delta(before, k2.dispatch_stats.as_dict())
+    assert d["forwarded"] == 1 and d["stage_copies"] == 0
+    assert d["aligned_calls"] == 1  # selection at the PADDED extent
+    assert d["unstage_copies"] == 1  # finalize slices back to m rows
+    got = np.asarray(out)
+    assert got.shape == (m, 48)
+    assert not np.isnan(got).any()
+    np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_gemm_lazy_output_defers_the_unstage(eng):
+    k1 = _gemm_kern(eng, 64, 96)
+    m = next(m for m in range(3, 257) if k1.select(m).padded_m > m)
+    a, w1 = _arr((m, 96)), _arr((96, 64))
+    ref = k1(a, w1)
+
+    before = k1.dispatch_stats.as_dict()
+    h = k1(a, w1, lazy=True)
+    d = _delta(before, k1.dispatch_stats.as_dict())
+    assert isinstance(h, LazyBucket) and not h.is_aligned
+    assert d["stage_copies"] == 1 and d["launches"] == 1
+    assert d["unstage_copies"] == 0  # deferred: only paid if forced ...
+    assert d["realize_slices"] == 0
+    np.testing.assert_array_equal(np.asarray(h.realize()), np.asarray(ref))
+    assert k1.dispatch_stats.realize_slices - before["realize_slices"] == 1
+
+
+def test_incompatible_bucket_restages_and_stays_correct(eng):
+    """A handle whose buffer does not match the selection's staged shape
+    restages (counted) — the whole buffer, garbage tail included — and the
+    true-shape scalars keep the result bit-identical."""
+    k2 = _gemm_kern(eng, 48, 64)
+    w = next(w for w in range(2, 257) if k2.select(w).padded_m > w)
+    m = w - 1
+    w2 = _arr((64, 48))
+    clean = _arr((w, 64))
+    poisoned = clean.at[m:].set(np.nan)
+    ref = k2(jnp.asarray(clean[:m]), w2)
+
+    before = k2.dispatch_stats.as_dict()
+    h = LazyBucket(poisoned, m, 0, k2.dispatch_stats)
+    out = k2(h, w2)
+    d = _delta(before, k2.dispatch_stats.as_dict())
+    assert d["forwarded"] == 0 and d["stage_copies"] == 1
+    assert d["unaligned_calls"] == 1 and d["launches"] == 1
+    got = np.asarray(out)
+    assert not np.isnan(got).any()
+    np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def _attn_kern(eng, hd=32):
+    args = (
+        _arr((1, 2, 8, hd)), _arr((1, 1, 8, hd)), _arr((1, 1, 8, hd)),
+    )
+    return eng.op_kernel(
+        "attention", args, {"causal": True, "window": None, "softcap": None}
+    )
+
+
+def test_attention_forwards_nan_poisoned_kv_tails(eng):
+    kern = _attn_kern(eng)
+    hd = 32
+    fix = [
+        s for s in range(2, 257)
+        if kern.select(s).bucket == (s, hd, s)
+    ]
+    assert fix, "no attention bucket fixpoint <= 256"
+    sb = fix[-1]
+    ms = [m for m in range(sb - 1, 0, -1)
+          if kern.select(m).bucket == (sb, hd, sb)]
+    assert ms
+    m = ms[0]
+    q = _arr((1, 2, sb, hd)).at[:, :, m:].set(np.nan)
+    k = _arr((1, 1, sb, hd)).at[:, :, m:].set(np.nan)
+    v = _arr((1, 1, sb, hd)).at[:, :, m:].set(np.nan)
+    ref = kern(
+        jnp.asarray(q[:, :, :m]), jnp.asarray(k[:, :, :m]),
+        jnp.asarray(v[:, :, :m]),
+    )
+
+    st = kern.dispatch_stats
+    before = st.as_dict()
+    hq = LazyBucket(q, m, 2, st)
+    hk = LazyBucket(k, m, 2, st)
+    hv = LazyBucket(v, m, 2, st)
+    out = kern(hq, hk, hv)
+    d = _delta(before, st.as_dict())
+    assert d["forwarded"] == 3 and d["stage_copies"] == 0
+    assert d["aligned_calls"] == 1 and d["launches"] == 1
+    got = np.asarray(out)
+    assert got.shape == (1, 2, m, hd)
+    assert not np.isnan(got).any()
+    np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_attention_mixed_handle_plain_realizes(eng):
+    """A plain q at the TRUE extent alongside padded k/v handles trips the
+    q/kv seq-match assertion — the dispatch falls back to realize-all and
+    stays bit-identical (counted slices, no crash)."""
+    kern = _attn_kern(eng)
+    hd = 32
+    sb = max(
+        s for s in range(2, 257) if kern.select(s).bucket == (s, hd, s)
+    )
+    m = sb - 1
+    q = _arr((1, 2, m, hd))
+    k = _arr((1, 1, sb, hd)).at[:, :, m:].set(np.nan)
+    v = _arr((1, 1, sb, hd)).at[:, :, m:].set(np.nan)
+    ref = kern(q, jnp.asarray(k[:, :, :m]), jnp.asarray(v[:, :, :m]))
+
+    st = kern.dispatch_stats
+    before = st.as_dict()
+    out = kern(q, LazyBucket(k, m, 2, st), LazyBucket(v, m, 2, st))
+    d = _delta(before, st.as_dict())
+    assert d["realize_slices"] == 2 and d["forwarded"] == 0
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_decode_consumes_lazy_kv_buffers(eng):
+    """Decode attention consumes NaN-tailed k/v bucket handles directly —
+    the serving scenario where the prefill chain's projection buffers
+    BECOME the cache without a copy."""
+    hd = 32
+    rep = (_arr((2, 4, 1, hd)), _arr((2, 2, 8, hd)), _arr((2, 2, 8, hd)), 8)
+    kern = eng.op_kernel("decode_attention", rep, {})
+    wl = kern.workload
+    fix = [
+        s for s in range(2, 257)
+        if wl.dynamic_bucket(kern.select(s)) == s
+    ]
+    assert fix
+    kvb = fix[-1]
+    m = kvb - 1
+    q = _arr((2, 4, 1, hd))
+    k = _arr((2, 2, kvb, hd)).at[:, :, m:].set(np.nan)
+    v = _arr((2, 2, kvb, hd)).at[:, :, m:].set(np.nan)
+    ref = kern(q, jnp.asarray(k[:, :, :m]), jnp.asarray(v[:, :, :m]), m)
+
+    st = kern.dispatch_stats
+    before = st.as_dict()
+    out = kern(q, LazyBucket(k, m, 2, st), LazyBucket(v, m, 2, st), m)
+    d = _delta(before, st.as_dict())
+    assert d["forwarded"] == 2
+    assert d["aligned_calls"] == 1 and d["launches"] == 1
+    assert d["stage_copies"] == 0 and d["unstage_copies"] == 0
+    got = np.asarray(out)
+    assert not np.isnan(got).any()
+    np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Staging pool: LRU retention bound
+# ---------------------------------------------------------------------------
+
+
+def test_staging_pool_lru_cap_and_mru_reuse():
+    pool = _StagingPool(cap=2)
+    need = {0: ((4, 4), jnp.float32)}
+    sets = [pool.acquire(need) for _ in range(3)]  # all checked out
+    assert len({id(s) for s in sets}) == 3
+    assert pool.retained == []  # in-flight sets are NOT in the free list
+    for s in sets:
+        pool.release(s)
+    assert len(pool.retained) == 2  # LRU (first released) evicted
+    assert pool.retained[-1] is sets[-1]
+    assert all(s is not sets[0] for s in pool.retained)
+    assert pool.acquire(need) is sets[-1]  # MRU-first reuse
+
+
+def test_staging_pool_cap_zero_retains_nothing():
+    pool = _StagingPool(cap=0)
+    need = {0: ((4, 4), jnp.float32)}
+    pool.release(pool.acquire(need))
+    assert pool.retained == []
+
+
+def test_engine_config_threads_pool_cap():
+    e = Engine(EngineConfig(
+        hardware="host_cpu", empirical_levels=(), staging_pool_cap=0,
+    ))
+    kern = e.op_kernel("gemm", (_arr((5, 16)), _arr((16, 8))), {})
+    m = next(m for m in range(3, 257) if kern.select(m).padded_m > m)
+    out = kern(_arr((m, 16)), _arr((16, 8)))
+    assert out.shape == (m, 8)
+    assert kern.dispatch_stats.stage_copies >= 1
+    pools = [entry.pool for entry in kern._exec_cache.values()]
+    assert pools and all(p.cap == 0 and p.retained == [] for p in pools)
+
+
+def test_pool_eviction_never_races_in_flight():
+    """cap=1 under concurrent unaligned dispatch: every result stays
+    bit-identical to its serial reference (a set in use is checked out, so
+    eviction can only ever drop idle sets) and at most one set is retained
+    after the burst."""
+    e = Engine(EngineConfig(
+        hardware="host_cpu", empirical_levels=(), staging_pool_cap=1,
+    ))
+    kern = e.op_kernel("gemm", (_arr((5, 16)), _arr((16, 8))), {})
+    m = next(m for m in range(3, 257) if kern.select(m).padded_m > m)
+    w = _arr((16, 8))
+    xs = [_arr((m, 16)) for _ in range(8)]
+    refs = [np.asarray(kern(x, w)) for x in xs]
+
+    errors: list = []
+
+    def worker(i):
+        try:
+            for _ in range(4):
+                got = np.asarray(kern(xs[i], w))
+                np.testing.assert_array_equal(got, refs[i])
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append((i, exc))
+
+    threads = [
+        threading.Thread(target=worker, args=(i,)) for i in range(len(xs))
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:2]
+    for entry in kern._exec_cache.values():
+        assert len(entry.pool.retained) <= 1
+
+
+# ---------------------------------------------------------------------------
+# Whole-model chained prefill (launch/serve.py prefill="chained")
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def chained_server():
+    cfg = get_smoke_config("paper-gpt2-124m")
+    return VortexServer(
+        cfg, make_host_mesh(), max_cache=256, prefill="chained"
+    )
+
+
+def _engine_chain_stats(server) -> dict:
+    agg = {
+        "stage_copies": 0, "unstage_copies": 0, "realize_slices": 0,
+        "forwarded": 0, "launches": 0,
+    }
+    for kind, st in server.engine.stats().items():
+        for key in agg:
+            agg[key] += st[key]
+    return agg
+
+
+def test_prefill_knob_validated():
+    with pytest.raises(ValueError, match="prefill"):
+        VortexServer(
+            get_smoke_config("paper-gpt2-124m"), make_host_mesh(),
+            prefill="nope",
+        )
+
+
+def test_chain_seq_bucket_is_aligned(chained_server):
+    srv = chained_server
+    assert srv._prefill_chained_supported()
+    sp = srv.chain_seq_bucket(100, 1)
+    assert sp >= srv.seq_bucket(100)
+    assert srv._chain_aligned(1, sp)
+    assert srv.kv_bucket(sp) == sp
+
+
+def test_chained_prefill_bitwise_vs_eager_with_zero_copies(chained_server):
+    """The tentpole acceptance: a whole-model chained prefill is
+    bit-identical to the eager per-op reference (same dispatch sequence on
+    plain arrays) and performs ZERO interior unstage+restage pairs — the
+    boundary-copy counters don't move at a chain-aligned bucket."""
+    srv = chained_server
+    cfg = srv.cfg
+    sp = srv.chain_seq_bucket(100, 1)
+    tokens = (np.arange(100, dtype=np.int32)[None] * 7) % cfg.vocab
+    batch = srv._make_batch(1, sp, tokens)
+
+    before = _engine_chain_stats(srv)
+    last, cache = srv.prefill_chained(1, sp, batch)
+    d = _delta(before, _engine_chain_stats(srv))
+
+    n_blocks = cfg.n_layers
+    copies = d["stage_copies"] + d["unstage_copies"] + d["realize_slices"]
+    assert copies == 0, d
+    assert copies / n_blocks <= 1  # the per-block gate, trivially
+    assert d["forwarded"] >= n_blocks
+    assert d["launches"] >= 6 * n_blocks  # q/k/v/attn/o + mlp, per block
+
+    last_e, cache_e = srv.prefill_chained(1, sp, batch, eager=True)
+    np.testing.assert_array_equal(np.asarray(last), np.asarray(last_e))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)
+        ),
+        cache, cache_e,
+    )
+    # Cache leaves landed kv-bucket shaped, dtype matching the model cache.
+    kvb = srv.kv_bucket(sp)
+    for entry in cache.values():
+        for leaf in entry.values():
+            assert leaf.shape[3] == kvb
+            assert leaf.dtype == jnp.dtype(cfg.dtype)
+
+
+def test_chained_prefill_matches_aot_loosely(chained_server):
+    """Chained vs the AOT program is an INFORMATIONAL closeness check only
+    (different fusion in bf16) — the structural contract (shapes, dtypes,
+    cache tree) is exact."""
+    srv = chained_server
+    sp = srv.chain_seq_bucket(64, 1)
+    tokens = (np.arange(64, dtype=np.int32)[None] * 11) % srv.cfg.vocab
+    batch = srv._make_batch(1, sp, tokens)
+    last_c, cache_c = srv.prefill_chained(1, sp, batch)
+    last_a, cache_a = srv._prefill_exec_for(1, sp, batch)(srv.params, batch)
+    assert last_c.shape == last_a.shape and last_c.dtype == last_a.dtype
+    flat_c = jax.tree_util.tree_leaves(cache_c)
+    flat_a = jax.tree_util.tree_leaves(cache_a)
+    assert [(a.shape, a.dtype) for a in flat_c] == \
+        [(a.shape, a.dtype) for a in flat_a]
+    a = np.asarray(last_c, np.float32)
+    b = np.asarray(last_a, np.float32)
+    scale = max(float(np.max(np.abs(b))), 1.0)
+    assert float(np.max(np.abs(a - b))) / scale < 0.15
+
+
+def test_generate_routes_chained_and_decodes(chained_server):
+    srv = chained_server
+    before = srv.stats["chained_prefills"]
+    launches = srv.decode_stats.launches
+    tokens = (RNG.integers(0, srv.cfg.vocab, (2, 37))).astype(np.int32)
+    out = srv.generate(Request(tokens=tokens, max_new=4))
+    assert out.shape == (2, 4)
+    assert srv.stats["chained_prefills"] == before + 1
+    assert srv.decode_stats.launches == launches + 3
+    assert srv.decode_stats.padded_calls == 0
+
+
+def test_chained_unsupported_arch_reports_fallback():
+    cfg = get_smoke_config("falcon-mamba-7b")  # mamba mixer: no chain
+    srv = VortexServer(
+        cfg, make_host_mesh(), max_cache=64, prefill="chained"
+    )
+    assert not srv._prefill_chained_supported()
+
+
+def test_engine_dispatch_stats_surfaces_chain_counters(chained_server):
+    stats = chained_server.engine_dispatch_stats()
+    for kind, st in stats.items():
+        assert "forwarded" in st and "realize_slices" in st, kind
