@@ -350,6 +350,86 @@ def _bench_decode(smoke: bool) -> dict:
     }
 
 
+def _bench_continuous_batching(smoke: bool) -> dict:
+    """The continuous-batching serving section: the SAME 16 requests
+    served (a) serially through ``generate()`` and (b) through the
+    admission-queue scheduler at concurrency 1/4/16, reporting tokens/sec
+    per mode plus the batched-step contract — exactly one AOT launch per
+    batched decode step, zero padded calls.  CI gates
+    launches_per_batched_step == 1, padded_calls == 0 and
+    speedup_at_16 >= 1.5 (the batch-bucket dimension amortizes the
+    per-launch cost serial decode pays per request)."""
+    from jax.sharding import Mesh
+    from repro.launch.scheduler import ContinuousScheduler
+    from repro.launch.serve import Request, VortexServer
+    from repro.models.registry import get_smoke_config
+
+    cfg = get_smoke_config("paper-gpt2-124m")
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    server = VortexServer(cfg, mesh, max_cache=256)
+    rng = np.random.default_rng(23)
+    max_new = 8
+    reqs = [
+        Request(
+            tokens=rng.integers(
+                0, cfg.vocab, (1, int(s))
+            ).astype(np.int32),
+            max_new=max_new,
+        )
+        for s in rng.integers(30, 60, 16)
+    ]
+    total_tokens = len(reqs) * max_new
+
+    def timed_serial() -> float:
+        t0 = time.perf_counter()
+        for req in reqs:
+            server.generate(req)
+        return time.perf_counter() - t0
+
+    def timed_sched(batch_rows: int) -> tuple[float, dict]:
+        sched = ContinuousScheduler(server, batch_rows=batch_rows)
+        t0 = time.perf_counter()
+        for req in reqs:
+            sched.submit(req)
+        res = sched.drain()
+        wall = time.perf_counter() - t0
+        assert len(res) == len(reqs)
+        sched.close()
+        return wall, sched.stats
+
+    timed_serial()  # warm every prefill/decode executable
+    serial_wall = timed_serial()
+    out: dict = {
+        "requests": len(reqs),
+        "max_new": max_new,
+        "serial_tokens_per_s": total_tokens / serial_wall,
+        "concurrency": {},
+    }
+    worst_lps, padded = 0.0, 0
+    for c in (1, 4, 16):
+        timed_sched(c)  # warm the (c, kvb) mixed-progress programs
+        wall, stats = timed_sched(c)
+        lps = stats["launches"] / max(stats["steps"], 1)
+        worst_lps = max(worst_lps, lps)
+        padded += stats["padded_calls"]
+        out["concurrency"][str(c)] = {
+            "tokens_per_s": total_tokens / wall,
+            "batched_steps": stats["steps"],
+            "launches_per_batched_step": lps,
+            "padded_calls": stats["padded_calls"],
+        }
+    out["launches_per_batched_step"] = worst_lps
+    out["padded_calls"] = padded
+    out["speedup_at_16"] = (
+        out["concurrency"]["16"]["tokens_per_s"]
+        / out["serial_tokens_per_s"]
+    )
+    pool = server.engine_dispatch_stats()["kv_pool"]
+    out["kv_pool"] = pool
+    assert pool["leases_active"] == 0, pool
+    return out
+
+
 def _bench_prefill_chain(smoke: bool) -> dict:
     """The chained-prefill serving section (DESIGN.md §8): whole-model
     prefills through launch/serve.py's lazy handle chain, reporting the
@@ -452,6 +532,7 @@ def serving_payload(smoke: bool) -> dict:
         "hot_path": _bench_hot_path(smoke),
         "decode": _bench_decode(smoke),
         "prefill_chain": _bench_prefill_chain(smoke),
+        "continuous_batching": _bench_continuous_batching(smoke),
     }
 
 

@@ -724,8 +724,14 @@ class DecodeAttentionWorkload(AttentionWorkload):
     causal mask; sliding windows re-base through the same offset.
 
     Call signature: ``decode_attention(q, k, v, kv_len)`` with q
-    (b, hq, 1, d) and k/v (b, hkv, S, d), S >= kv_len >= 1.  Two serving
-    shapes hit the padding-free path:
+    (b, hq, 1, d) and k/v (b, hkv, S, d), S >= kv_len >= 1.  ``kv_len``
+    is a scalar (whole batch at one position) or a (b,) i32 vector giving
+    each batch row its OWN valid-row count — mixed-progress batched
+    decode, one launch serving rows at different positions, a 0 masking a
+    row to zero work.  The two ranks lower to different AOT programs
+    (``exec_key`` carries the rank), and per-row causality still needs no
+    flag: row i's query sits at ``kv_len[i] - 1``.  Two serving shapes
+    hit the padding-free path:
 
       * S already a kv bucket (the serving cache lives in bucket-shaped
         buffers and grows in place by ``dynamic_update_slice``) — aligned,
@@ -795,12 +801,20 @@ class DecodeAttentionWorkload(AttentionWorkload):
         return k.shape[-2]
 
     def exec_key(self, q, k, v, kv_len) -> tuple:
-        return (q.shape[0], q.shape[1], k.shape[1])
+        # kv_len's rank is part of the key: a scalar (whole batch at one
+        # position) and a (b,) per-row vector (mixed-progress batched
+        # decode) lower to DIFFERENT programs — the AOT artifact is
+        # shape-specialized, so they must not share a cache entry.
+        return (
+            q.shape[0], q.shape[1], k.shape[1],
+            getattr(kv_len, "ndim", 0),
+        )
 
     def stage_view(self, q, k, v, kv_len) -> tuple:
         # Coerce a Python-int kv_len to np.int32 so the steady-state call
         # matches the AOT artifact's dtypes (a bare int would demote every
-        # dispatch to jit re-dispatch); traced/jax values pass through.
+        # dispatch to jit re-dispatch); traced/jax values (including (b,)
+        # per-row vectors) pass through.
         if isinstance(kv_len, (bool, int, np.integer)):
             kv_len = np.int32(kv_len)
         return q, k, v, kv_len
@@ -862,22 +876,30 @@ class DecodeAttentionWorkload(AttentionWorkload):
 
         _, d, pkv = sel.bucket
         if args:
-            b, hq, hkv = self.exec_key(*args)
+            b, hq, hkv, kv_ndim = self.exec_key(*args)
             dts = tuple(a.dtype for a in args[:3])
         else:
-            b, hq, hkv = 1, 1, 1
+            b, hq, hkv, kv_ndim = 1, 1, 1, 0
             dts = (jnp.float32,) * 3
+        # The warm kv_len must match the live calls' rank: the AOT program
+        # a (b,) vector lowers embeds per-row masking.
+        kv_ex = (
+            jnp.full((b,), pkv, jnp.int32) if kv_ndim else np.int32(pkv)
+        )
         return (
             jnp.zeros((b, hq, 1, d), dts[0]),
             jnp.zeros((b, hkv, pkv, d), dts[1]),
             jnp.zeros((b, hkv, pkv, d), dts[2]),
-            np.int32(pkv),
+            kv_ex,
         )
 
     def reference(self, q, k, v, kv_len):
         from repro.kernels.ref import ref_attention
 
-        kv_len = int(kv_len)
+        if getattr(kv_len, "ndim", 0):
+            kv_len = np.asarray(kv_len, np.int32)
+        else:
+            kv_len = int(kv_len)
         return ref_attention(
             q, k, v, causal=False, window=self.window,
             softcap=self.softcap, offset=kv_len - 1, kv_len=kv_len,

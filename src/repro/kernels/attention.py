@@ -6,9 +6,10 @@ pair is drawn from the Vortex layer-1 lattice (m-tile for queries, k-tile for
 keys), so the same sample-free bucketing governs attention and plain GEMMs.
 
 Key-side padding is handled by an EXPLICIT validity mask, not by the causal
-structure: ``kv_len`` (a runtime i32 scalar in SMEM) marks how many leading
-key/value rows are real, scores past it are masked to -inf and the value
-rows are zeroed on load.  The pad tail of k/v may therefore hold arbitrary
+structure: ``kv_len`` (a runtime i32 in SMEM — one scalar shared by the
+batch, or a per-batch-row vector for mixed-progress decode) marks how many
+leading key/value rows are real, scores past it are masked to -inf and the
+value rows are zeroed on load.  The pad tail of k/v may therefore hold arbitrary
 garbage (stale bytes in an engine staging buffer, NaNs), and non-causal
 attention buckets exactly as safely as causal attention.  Requested blocks
 are honored verbatim — sequence lengths that are not block multiples get
@@ -39,18 +40,24 @@ def _attn_kernel(
     kv_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     *, gkv: int, block_q: int, block_k: int, scale: float,
     causal: bool, window: int | None, softcap: float | None,
+    heads: int, rows: int,
 ):
     """One (head, q-block): stream kv blocks, online softmax in VMEM scratch.
 
-    ``kv_ref`` (SMEM) holds two runtime scalars: the TRUE key/value length
-    and the absolute position of query row 0.  Everything past the kv
-    length — bucket pad, stale staging bytes, out-of-bounds block tails —
-    is masked out of the scores and zeroed out of the PV product, so no
-    zero-filled padding (and no causal structure) is needed for
-    correctness.  The query offset re-bases the causal/window masks so a
-    single-row decode query (``sq == 1`` at absolute position
-    ``kv_len - 1``) masks exactly like the matching row of a full-sequence
-    call.
+    ``kv_ref`` (SMEM, shape ``(2, rows)``) holds two runtime i32 values per
+    batch row: the TRUE key/value length and the absolute position of query
+    row 0.  With ``rows == 1`` both are shared by every batch row (the
+    scalar contract); with ``rows == b`` each batch row masks at ITS OWN
+    extent — one launch serves rows at different kv positions
+    (mixed-progress batched decode), a ``kv_len`` of 0 masking a row to
+    zero work (all scores -inf, value rows zeroed, output exactly 0).
+    Everything past the per-row kv length — bucket pad, stale staging
+    bytes, out-of-bounds block tails — is masked out of the scores and
+    zeroed out of the PV product, so no zero-filled padding (and no causal
+    structure) is needed for correctness.  The query offset re-bases the
+    causal/window masks so a single-row decode query (``sq == 1`` at
+    absolute position ``kv_len - 1``) masks exactly like the matching row
+    of a full-sequence call.
     """
     kv_i = pl.program_id(2)
 
@@ -63,8 +70,11 @@ def _attn_kernel(
     q = q_ref[0]  # (block_q, d)
     k = k_ref[0]  # (block_k, d)
     v = v_ref[0]
-    kv_limit = kv_ref[0]
-    q_off = kv_ref[1]
+    # Grid axis 0 is flattened (batch, head): the batch row owning this
+    # program recovers as pid // heads (0 when the extents are shared).
+    row = pl.program_id(0) // heads if rows > 1 else 0
+    kv_limit = kv_ref[0, row]
+    q_off = kv_ref[1, row]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
@@ -131,13 +141,16 @@ def flash_attention(
     Args:
       q: (batch, q_heads, seq, head_dim)
       k, v: (batch, kv_heads, seq, head_dim); q_heads % kv_heads == 0 (GQA).
-      kv_len: optional runtime i32 scalar — the number of REAL key/value
-        rows; rows past it (staging-buffer pad, garbage) are masked out.
+      kv_len: optional runtime i32 — the number of REAL key/value rows;
+        rows past it (staging-buffer pad, garbage) are masked out.
+        Either a scalar shared by the whole batch or a ``(batch,)`` vector
+        giving each batch row its OWN extent (mixed-progress batched
+        decode; a 0 masks that row to zero work and an all-zero output).
         Defaults to the full (static) key length.
-      q_offset: optional runtime i32 scalar — the absolute position of
-        query row 0 (decode: ``kv_len - 1`` for the single new token).
-        Re-bases the causal/window masks; defaults to 0 (self-attention
-        with queries and keys sharing position 0).
+      q_offset: optional runtime i32 scalar or ``(batch,)`` vector — the
+        absolute position of query row 0 (decode: ``kv_len - 1`` for the
+        single new token).  Re-bases the causal/window masks; defaults to
+        0 (self-attention with queries and keys sharing position 0).
       block_q/block_k: Vortex layer-1 tiles for the sequence dims — honored
         verbatim; non-multiple sequence lengths get masked boundary tiles.
         A decode-shaped call (sq == 1) runs block_q == 1 — the q tile is
@@ -157,9 +170,19 @@ def flash_attention(
         kv_len = skv
     if q_offset is None:
         q_offset = 0
+    kv_vec = jnp.asarray(kv_len, jnp.int32)
+    off_vec = jnp.asarray(q_offset, jnp.int32)
+    for name, vec in (("kv_len", kv_vec), ("q_offset", off_vec)):
+        assert vec.ndim <= 1 and (vec.ndim == 0 or vec.shape == (b,)), (
+            f"{name} must be a scalar or a (batch,)=({b},) vector, "
+            f"got shape {vec.shape}"
+        )
+    # Per-row extents ride as a (2, rows) SMEM array: one column per batch
+    # row when either extent is a vector, one shared column otherwise.
+    rows = b if (kv_vec.ndim or off_vec.ndim) else 1
     kv_arr = jnp.stack([
-        jnp.asarray(kv_len, jnp.int32).reshape(()),
-        jnp.asarray(q_offset, jnp.int32).reshape(()),
+        jnp.broadcast_to(kv_vec.reshape(-1), (rows,)),
+        jnp.broadcast_to(off_vec.reshape(-1), (rows,)),
     ])
 
     qf = q.reshape(b * hq, sq, d)
@@ -170,6 +193,7 @@ def flash_attention(
         _attn_kernel,
         gkv=gkv, block_q=block_q, block_k=block_k, scale=scale,
         causal=causal, window=window, softcap=softcap,
+        heads=hq, rows=rows,
     )
 
     def kv_map(h, i, j):

@@ -62,25 +62,48 @@ def ref_attention(
     Shapes as kernels/attention.py: q (b, hq, sq, d); k, v (b, hkv, skv, d).
     ``kv_len`` (optional runtime i32) marks the real key/value rows; rows
     past it may hold arbitrary garbage (staged-bucket pad) and are both
-    score-masked and zeroed out of the PV product.
+    score-masked and zeroed out of the PV product.  ``kv_len`` and
+    ``offset`` are scalars shared by the batch or (b,) vectors giving each
+    batch row its own extent/position (mixed-progress batched decode; a
+    kv_len of 0 masks that row entirely — its output is exactly 0).
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     group = hq // hkv
     kx = jnp.repeat(k, group, axis=1) if group > 1 else k
     vx = jnp.repeat(v, group, axis=1) if group > 1 else v
+    off_vec = jnp.asarray(offset, jnp.int32)
+    kv_vec = None if kv_len is None else jnp.asarray(kv_len, jnp.int32)
+    per_row = off_vec.ndim == 1 or (kv_vec is not None and kv_vec.ndim == 1)
     if kv_len is not None:
         # Zero invalid value rows: their softmax weight is exactly 0, but
         # 0 * garbage(NaN) would still poison every real query row.
-        valid = (jnp.arange(skv) < kv_len)[None, None, :, None]
-        vx = jnp.where(valid, vx, 0)
+        if per_row:
+            valid = jnp.arange(skv)[None, :] < kv_vec.reshape(-1, 1)
+            vx = jnp.where(valid[:, None, :, None], vx, 0)
+        else:
+            valid = (jnp.arange(skv) < kv_len)[None, None, :, None]
+            vx = jnp.where(valid, vx, 0)
     s = jnp.einsum(
         "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
     ) * (d ** -0.5)
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
-    m = _mask(sq, skv, causal, window, offset, kv_len=kv_len)
-    s = jnp.where(m[None, None], s, -1e30)
+    if per_row:
+        # (b, sq, skv) mask: every row masks at ITS OWN offset/extent.
+        q_pos = off_vec.reshape(-1, 1, 1) + jnp.arange(sq)[None, :, None]
+        k_pos = jnp.arange(skv)[None, None, :]
+        m = jnp.ones((1, sq, skv), jnp.bool_)
+        if kv_vec is not None:
+            m = m & (k_pos < kv_vec.reshape(-1, 1, 1))
+        if causal:
+            m = m & (k_pos <= q_pos)
+        if window is not None:
+            m = m & (q_pos - k_pos < window)
+        s = jnp.where(m[:, None], s, -1e30)
+    else:
+        m = _mask(sq, skv, causal, window, offset, kv_len=kv_len)
+        s = jnp.where(m[None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -106,7 +129,9 @@ def chunked_attention(
 
     ``kv_len`` (optional runtime i32) marks the real key/value rows, exactly
     as in :func:`ref_attention` — required when the kv pad region may hold
-    garbage rather than zeros (the engine's staged buckets).
+    garbage rather than zeros (the engine's staged buckets).  ``kv_len``
+    and ``offset`` accept (b,) per-batch-row vectors (mixed-progress
+    batched decode), scalar semantics otherwise unchanged.
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
@@ -156,7 +181,13 @@ def chunked_attention(
     kc = pin5(k.reshape(b, hkv, n_chunks, chunk, dk).transpose(2, 0, 1, 3, 4))
     vc = pin5(v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4))
 
-    q_pos = offset + jnp.arange(sq)
+    off_vec = jnp.asarray(offset, jnp.int32)
+    kv_vec = None if kv_len is None else jnp.asarray(kv_len, jnp.int32)
+    per_row = off_vec.ndim == 1 or (kv_vec is not None and kv_vec.ndim == 1)
+    q_pos = (
+        off_vec.reshape(-1, 1) + jnp.arange(sq)[None]  # (b, sq)
+        if per_row else offset + jnp.arange(sq)
+    )
 
     def step(carry, xs):
         m_prev, l_prev, acc = carry
@@ -167,22 +198,39 @@ def chunked_attention(
         kb = pin(kb.astype(jnp.float32))
         vb = pin(vb.astype(jnp.float32))
         k_pos = ci * chunk + jnp.arange(chunk)
-        valid = k_pos < (
-            skv_true if kv_len is None else jnp.minimum(kv_len, skv_true)
+        limit = (
+            skv_true if kv_vec is None else jnp.minimum(kv_vec, skv_true)
         )
+        if per_row:
+            lim = jnp.broadcast_to(
+                jnp.asarray(limit, jnp.int32).reshape(-1), (b,)
+            )
+            valid = k_pos[None, :] < lim[:, None]  # (b, chunk)
+        else:
+            valid = k_pos < limit
         if kv_len is not None:
             # Garbage value rows past kv_len must be zeroed, not merely
             # zero-weighted (0 * NaN poisons every real query row).
-            vb = jnp.where(valid[None, None, :, None], vb, 0)
+            vzero = valid[:, None, :, None] if per_row \
+                else valid[None, None, :, None]
+            vb = jnp.where(vzero, vb, 0)
         s = pin(jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale)
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
-        msk = jnp.broadcast_to(valid[None, :], (sq, chunk))
-        if causal:
-            msk = msk & (k_pos[None, :] <= q_pos[:, None])
-        if window is not None:
-            msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
-        s = jnp.where(msk[None, None], s, -1e30)
+        if per_row:
+            msk = jnp.broadcast_to(valid[:, None, :], (b, sq, chunk))
+            if causal:
+                msk = msk & (k_pos[None, None, :] <= q_pos[:, :, None])
+            if window is not None:
+                msk = msk & (q_pos[:, :, None] - k_pos[None, None, :] < window)
+            s = jnp.where(msk[:, None], s, -1e30)
+        else:
+            msk = jnp.broadcast_to(valid[None, :], (sq, chunk))
+            if causal:
+                msk = msk & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(msk[None, None], s, -1e30)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new[..., None])

@@ -1,0 +1,334 @@
+"""Continuous batching on top of :class:`~repro.launch.serve.VortexServer`.
+
+The serial server runs one request at a time: prefill, then one decode
+launch per token with the whole batch at ONE position.  Under concurrent
+traffic that leaves the batch-bucket dimension idle — every request pays
+its own decode stream.  This module packs concurrent requests into that
+dimension instead:
+
+  * an ADMISSION QUEUE (``submit``) accepts requests from any thread,
+    assigns ``request_id``s, and rejects requests that could never be
+    served (``prompt + max_new - 1 > max_cache``, or more rows than the
+    scheduler has slots) with a queue-level error AT SUBMIT TIME — not
+    deep inside a decode loop;
+  * a STEP SCHEDULER (``step``/``drain``) retires finished rows and
+    admits queued prefills between steps, then advances every active row
+    with ONE mixed-progress decode launch
+    (``VortexServer._decode_exec_vec_for``): ``pos`` is a per-row i32
+    vector, so rows sitting at different kv positions — fresh admits next
+    to nearly-done generations — share the launch.  Free slots ride along
+    at ``pos=0``: the program writes their (finite) k/v row 0 and attends
+    over exactly that one masked row, so a retired slot costs one key of
+    work and never reads stale pool bytes;
+  * the KV state is ONE shared set of kv-bucket buffers LEASED from the
+    server's :class:`~repro.launch.serve.KVBucketPool` — each admitted
+    row's prefill cache is copied into its slot and the per-request
+    buffers released back immediately, and when any row outgrows the
+    bucket the shared cache grows through the pool
+    (``VortexServer._grow_cache``) exactly like the serial path.
+
+Step-granular contract (asserted by tests/test_scheduler.py and gated in
+the bench): one AOT launch per batched decode step, zero padded calls,
+and per-request outputs token-identical to serial ``generate()`` on the
+same server.
+
+Supported architectures are the uniformly-attention decoders (every
+mixer ``attn``, no cross-attention / vision prefix / encoder stack): the
+shared cache then holds only k/v leaves, whose every read goes through
+the kv_len mask — the stale-tail pool contract.  MLA/mamba/encoder
+architectures keep the serial path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import Request, VortexServer
+from repro.models.model import abstract_cache
+from repro.vortex import pow2_bucket
+
+__all__ = ["ContinuousScheduler", "batched_decode_supported"]
+
+
+def batched_decode_supported(cfg) -> bool:
+    """True when the mixed-progress batched decode serves this arch: all
+    mixers are plain attention (shared cache = k/v leaves only, every
+    read kv_len-masked) and there is no cross-attention, vision prefix,
+    or encoder stack feeding extra per-request state."""
+    if cfg.vision_prefix or cfg.encoder_decoder:
+        return False
+    return all(
+        spec.mixer == "attn" and not spec.cross_attn for spec in cfg.pattern
+    )
+
+
+@dataclasses.dataclass
+class _Row:
+    """One occupied batch slot: a single sequence of one request."""
+    rid: int
+    req_row: int        # which row of the request's (b, s) token block
+    pos_next: int       # cache position the NEXT decode step writes
+    remaining: int      # decode steps left (max_new - tokens emitted)
+    last_tok: int       # feeds the next step's token vector
+    out: list[int]      # generated tokens so far (prefill argmax first)
+    max_new: int
+    stop: int | None
+
+
+class ContinuousScheduler:
+    """Admission queue + mixed-progress step scheduler over a server.
+
+    ``submit()`` is thread-safe and returns the assigned request id;
+    ``step()``/``drain()`` must run on one scheduler thread.  ``drain()``
+    returns ``{request_id: (b, max_new) int64 array}`` for every request
+    completed since the previous drain.  ``close()`` releases the shared
+    cache leases back to the pool (``leases_active`` returns to 0).
+    """
+
+    def __init__(self, server: VortexServer, *, batch_rows: int = 8):
+        if not batched_decode_supported(server.cfg):
+            raise ValueError(
+                "continuous batching needs a uniformly-attention decoder "
+                "(every mixer 'attn', no cross-attn/vision/encoder); "
+                f"arch pattern {[s.mixer for s in server.cfg.pattern]} "
+                "is served by the serial generate() path"
+            )
+        self.server = server
+        self.batch_rows = pow2_bucket(batch_rows)
+        self._lock = threading.Lock()
+        self._queue: list[Request] = []
+        self._next_id = 0
+        self._results: dict[int, np.ndarray] = {}
+        # Per-request assembly: (buffer, rows_outstanding).
+        self._partial: dict[int, tuple[np.ndarray, int]] = {}
+        self.rows: list[_Row | None] = [None] * self.batch_rows
+        self.cache: dict | None = None
+        self.kvb = 0
+        self.stats = {
+            "steps": 0, "launches": 0, "padded_calls": 0,
+            "admitted": 0, "retired": 0,
+        }
+        # Per-step active-row positions (and the bucket they ran at), the
+        # evidence the staggering tests read: one entry per launch.
+        self.step_positions: list[dict] = []
+
+    # -- admission queue ----------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Queue a request, validating it AT ADMISSION: requests that
+        could never complete fail here with a clear error instead of
+        corrupting a decode loop later.  Thread-safe."""
+        b, s = req.tokens.shape
+        if b > self.batch_rows:
+            raise ValueError(
+                f"request has {b} rows but the scheduler batches "
+                f"{self.batch_rows}; split the request or raise batch_rows"
+            )
+        if s + req.max_new - 1 > self.server.max_cache:
+            raise ValueError(
+                f"admission refused: prompt_len {s} + max_new "
+                f"{req.max_new} needs {s + req.max_new - 1} cache rows > "
+                f"max_cache {self.server.max_cache}; raise max_cache or "
+                "shorten the request"
+            )
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            req = dataclasses.replace(req, request_id=rid)
+            self._queue.append(req)
+        return rid
+
+    # -- shared kv cache ----------------------------------------------------
+
+    def _ensure_cache(self, kvb: int) -> None:
+        """Lease the shared kv-bucket leaves (stale pool contents are fine:
+        a slot row is only read after its prefill copy / decode write, and
+        always through the kv_len mask)."""
+        if self.cache is not None:
+            return
+        spec = abstract_cache(self.server.cfg, self.batch_rows, kvb)
+        pool = self.server.kv_pool
+        self.cache = {
+            key: {n: pool.lease(l.shape, l.dtype) for n, l in entry.items()}
+            for key, entry in spec.items()
+        }
+        self.kvb = kvb
+
+    def _grow(self, new_kvb: int) -> None:
+        assert self.cache is not None
+        self.cache = self.server._grow_cache(self.cache, new_kvb)
+        self.kvb = new_kvb
+
+    def close(self) -> None:
+        """Release the shared cache leases; idempotent, and a later
+        submit/step re-leases lazily."""
+        if self.cache is None:
+            return
+        self.server.release_cache(self.cache)
+        self.cache = None
+        self.kvb = 0
+
+    def _copy_row(self, rcache: dict, r: int, slot: int) -> None:
+        """One admitted sequence: its prefill-emitted cache row lands in
+        the shared cache's slot row (per-leaf dynamic_update_slice; the
+        request bucket may be shorter than the shared bucket — the slot
+        row's tail past it stays stale, masked by kv_len)."""
+        assert self.cache is not None
+        for key, entry in self.cache.items():
+            src = rcache[key]
+            for name in entry:
+                row = jax.lax.dynamic_slice_in_dim(src[name], r, 1, axis=1)
+                entry[name] = jax.lax.dynamic_update_slice(
+                    entry[name], row, (0, slot, 0, 0, 0)
+                )
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, row in enumerate(self.rows) if row is None]
+
+    def _admit(self, req: Request) -> None:
+        """Prefill ONE queued request through the server's serial prefill
+        executables and seat its rows: per-row first token from the
+        prefill argmax, cache rows copied into free slots, the transient
+        per-request buffers released back to the pool."""
+        srv = self.server
+        b, s = req.tokens.shape
+        bp = srv.batch_bucket(b)
+        sp = srv.seq_bucket(s)
+        batch = srv._make_batch(bp, sp, req.tokens)
+        logits, rcache = srv._prefill_exec_for(bp, sp, batch)(
+            srv.params, batch
+        )
+        srv.adopt_cache(rcache)
+        try:
+            first = np.asarray(jnp.argmax(logits, -1))  # (bp,)
+            kvb_req = srv.kv_bucket(sp)
+            self._ensure_cache(kvb_req)
+            if kvb_req > self.kvb:
+                self._grow(kvb_req)
+            slots = self._free_slots()
+            rid = req.request_id
+            assert rid is not None
+            self._partial[rid] = (
+                np.zeros((b, req.max_new), np.int64), b
+            )
+            for r in range(b):
+                slot = slots[r]
+                self._copy_row(rcache, r, slot)
+                tok = int(first[r])
+                self.rows[slot] = _Row(
+                    rid=rid, req_row=r, pos_next=s,
+                    remaining=req.max_new - 1, last_tok=tok, out=[tok],
+                    max_new=req.max_new, stop=req.stop,
+                )
+                if req.stop is not None and tok == req.stop:
+                    self.rows[slot].remaining = 0
+        finally:
+            srv.release_cache(rcache)
+        self.stats["admitted"] += 1
+
+    def _retire(self, slot: int) -> None:
+        row = self.rows[slot]
+        assert row is not None and row.remaining == 0
+        out = row.out
+        if len(out) < row.max_new:  # early stop: pad with the stop token
+            out = out + [row.stop] * (row.max_new - len(out))
+        buf, outstanding = self._partial[row.rid]
+        buf[row.req_row] = out
+        outstanding -= 1
+        if outstanding:
+            self._partial[row.rid] = (buf, outstanding)
+        else:
+            del self._partial[row.rid]
+            with self._lock:
+                self._results[row.rid] = buf
+        self.rows[slot] = None
+        self.stats["retired"] += 1
+
+    def step(self) -> bool:
+        """One scheduler tick: retire finished rows, admit every queued
+        request that fits, then advance all active rows with EXACTLY ONE
+        mixed-progress decode launch.  Returns False when fully idle."""
+        srv = self.server
+        worked = False
+        for slot, row in enumerate(self.rows):
+            if row is not None and row.remaining == 0:
+                self._retire(slot)
+                worked = True
+        while True:
+            with self._lock:
+                req = (
+                    self._queue.pop(0)
+                    if self._queue
+                    and self._queue[0].tokens.shape[0]
+                    <= len(self._free_slots())
+                    else None
+                )
+            if req is None:
+                break
+            self._admit(req)
+            worked = True
+            # A stop token in the prefill argmax retires without a step.
+            for slot, row in enumerate(self.rows):
+                if row is not None and row.remaining == 0:
+                    self._retire(slot)
+
+        active = [
+            (slot, row) for slot, row in enumerate(self.rows)
+            if row is not None
+        ]
+        if not active:
+            return worked
+        assert self.cache is not None
+
+        needed = max(row.pos_next + 1 for _, row in active)
+        if needed > self.kvb and self.kvb < srv.max_cache:
+            self._grow(srv._grown_kv_bucket(self.kvb, needed))
+
+        # Free slots decode at pos 0: their k/v row 0 is freshly written
+        # by this very launch (finite), and kv_len = 1 reads only it.
+        tok = np.zeros((self.batch_rows, 1), np.int32)
+        pos = np.zeros((self.batch_rows,), np.int32)
+        for slot, row in active:
+            tok[slot, 0] = row.last_tok
+            pos[slot] = row.pos_next
+        exe = srv._decode_exec_vec_for(self.batch_rows, self.kvb)
+        logits, self.cache = exe(
+            srv.params, self.cache, jnp.asarray(tok), jnp.asarray(pos)
+        )
+        self.stats["steps"] += 1
+        self.stats["launches"] += 1  # the ONE launch this step performed
+        self.step_positions.append({
+            "kvb": self.kvb,
+            "pos": np.asarray([row.pos_next for _, row in active]),
+            "slots": np.asarray([slot for slot, _ in active]),
+        })
+        nxt = np.asarray(jnp.argmax(logits, -1))  # (batch_rows,)
+        for slot, row in active:
+            t = int(nxt[slot])
+            row.out.append(t)
+            row.last_tok = t
+            row.pos_next += 1
+            row.remaining -= 1
+            if row.stop is not None and t == row.stop:
+                row.remaining = 0
+        return True
+
+    def drain(self) -> dict[int, np.ndarray]:
+        """Run steps until queue and slots are empty; return (and clear)
+        the results completed since the last drain."""
+        while True:
+            worked = self.step()
+            with self._lock:
+                queued = bool(self._queue)
+            if not worked and not queued and not any(self.rows):
+                break
+        with self._lock:
+            out = self._results
+            self._results = {}
+        return out

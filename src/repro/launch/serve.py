@@ -58,6 +58,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import math
+import threading
 import time
 from typing import Any
 
@@ -75,13 +76,111 @@ from repro.models.registry import get_config, get_smoke_config
 from repro.train.step import make_decode_step, make_prefill_step
 from repro.vortex import CompiledOp, Engine, EngineConfig, pow2_bucket
 
-__all__ = ["VortexServer", "Request"]
+__all__ = ["VortexServer", "Request", "KVBucketPool"]
 
 
 @dataclasses.dataclass
 class Request:
     tokens: np.ndarray  # (batch, prompt_len)
     max_new: int = 8
+    # Early-stop token: a row that emits it retires immediately, its
+    # remaining output positions filled with the stop token (scheduler
+    # path; the serial ``generate()`` path always runs to max_new).
+    stop: int | None = None
+    # Assigned by the admission queue (launch/scheduler.py) so responses
+    # can be matched to submissions; the serial ``generate()`` path never
+    # reads it.
+    request_id: int | None = None
+
+
+class KVBucketPool:
+    """Shared pool of kv-bucket cache buffers, leased per request.
+
+    Cache growth used to drop the outgrown bucket's buffers to the GC and
+    allocate fresh zero-filled ones; under continuous batching that churn
+    happens on every admitted request.  The pool instead PARKS released
+    buffers keyed by (shape, dtype) and hands them back on the next lease.
+    A reused buffer is returned AS-IS — stale bytes and all — which is
+    safe exactly where the masked-tail contract holds: attention k/v
+    leaves are only ever read through the kv_len-masked decode workload,
+    so rows past each row's extent are never consumed.  Leaves whose
+    decode math masks scores but not values (MLA's ckv/k_rope: the
+    absorbed PV contraction would hit 0 * garbage) must lease with
+    ``zero=True``, which always allocates fresh zeros.
+
+    Every growable cache leaf in flight counts as one active lease
+    (``leases_active``; high-water mark ``leases_peak``) whether it came
+    from the free list or a fresh allocation — a non-zero ``leases_active``
+    at idle is a leak, asserted by the scheduler tests and surfaced via
+    ``VortexServer.engine_dispatch_stats()["kv_pool"]``.  Thread-safe: the
+    admission queue leases/releases from submitter and scheduler threads.
+    """
+
+    # Parked buffers per (shape, dtype) key; beyond this the oldest are
+    # dropped to the GC — the pool bounds memory, it is not a cache of
+    # every bucket ever seen.
+    _MAX_PARKED = 16
+
+    def __init__(self) -> None:
+        self._free: dict[tuple, list[jax.Array]] = {}
+        self._lock = threading.Lock()
+        self.leases_active = 0
+        self.leases_peak = 0
+        self.lease_hits = 0
+        self.lease_allocs = 0
+        self.released = 0
+
+    def lease(self, shape, dtype, *, zero: bool = False) -> jax.Array:
+        """One bucket-shaped buffer: a parked one when available (stale
+        contents — callers must read it through a kv_len mask), else a
+        fresh zero-filled allocation.  ``zero=True`` always allocates."""
+        key = (tuple(shape), jnp.dtype(dtype).name)
+        buf = None
+        with self._lock:
+            free = self._free.get(key)
+            if free and not zero:
+                buf = free.pop()
+                self.lease_hits += 1
+            else:
+                self.lease_allocs += 1
+            self.leases_active += 1
+            self.leases_peak = max(self.leases_peak, self.leases_active)
+        if buf is None:
+            buf = jnp.zeros(tuple(shape), jnp.dtype(dtype))
+        return buf
+
+    def adopt(self, n: int) -> None:
+        """Register ``n`` buffers that entered circulation OUTSIDE
+        ``lease`` (the prefill step emits the initial cache leaves) so
+        their eventual ``release`` balances the books."""
+        with self._lock:
+            self.leases_active += n
+            self.leases_peak = max(self.leases_peak, self.leases_active)
+
+    def release(self, leaf: jax.Array, *, reuse: bool = True) -> None:
+        """Return a leased buffer.  ``reuse=False`` retires it to the GC
+        (zero-required leaves gain nothing from parking — their next
+        lease allocates fresh zeros anyway) but still settles the lease."""
+        with self._lock:
+            if reuse:
+                free = self._free.setdefault(
+                    (tuple(leaf.shape), jnp.dtype(leaf.dtype).name), []
+                )
+                free.append(leaf)
+                if len(free) > self._MAX_PARKED:
+                    del free[0]
+            self.leases_active -= 1
+            self.released += 1
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "leases_active": self.leases_active,
+                "leases_peak": self.leases_peak,
+                "lease_hits": self.lease_hits,
+                "lease_allocs": self.lease_allocs,
+                "released": self.released,
+            }
 
 
 class VortexServer:
@@ -147,6 +246,13 @@ class VortexServer:
         self._prefill_exec: dict[tuple[int, int], jax.stages.Compiled] = {}
         self._decode_jits: dict[int, Any] = {}
         self._decode_exec: dict[tuple[int, int], jax.stages.Compiled] = {}
+        # Mixed-progress programs: same jit family, pos lowered as a (bp,)
+        # per-row vector — a DIFFERENT XLA artifact, cached separately so
+        # the scalar-pos serial path keeps its own executables.
+        self._decode_exec_vec: dict[tuple[int, int], jax.stages.Compiled] = {}
+        # Growable cache leaves are leased from (and returned to) a shared
+        # bucket pool instead of churning fresh allocations per growth.
+        self.kv_pool = KVBucketPool()
         self.stats = {
             "prefill_compiles": 0, "bucket_hits": 0,
             "decode_compiles": 0, "decode_bucket_hits": 0,
@@ -287,17 +393,77 @@ class VortexServer:
             self.stats["decode_bucket_hits"] += 1
         return exe
 
+    def _decode_exec_vec_for(self, bp: int, kvb: int) -> "jax.stages.Compiled":
+        """The mixed-progress decode program for a (batch-bucket,
+        cache-length) pair: identical to ``_decode_exec_for`` except
+        ``pos`` lowers as a ``(bp,)`` per-row i32 vector, so ONE launch
+        advances rows sitting at DIFFERENT kv positions — the scheduler's
+        batched step.  Shares the jit family (and the compile counters)
+        with the scalar program; the compiled artifacts are distinct."""
+        key = (bp, kvb)
+        exe = self._decode_exec_vec.get(key)
+        if exe is None:
+            dj = self._decode_jits.get(kvb)
+            if dj is None:
+                dj = jax.jit(
+                    make_decode_step(self.cfg, self.rules, cache_len=kvb)
+                )
+                self._decode_jits[kvb] = dj
+            with self.engine.use():
+                exe = dj.lower(
+                    self.params,
+                    abstract_cache(self.cfg, bp, kvb),
+                    jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+                    jax.ShapeDtypeStruct((bp,), jnp.int32),
+                ).compile()
+            self._decode_exec_vec[key] = exe
+            self.stats["decode_compiles"] += 1
+        else:
+            self.stats["decode_bucket_hits"] += 1
+        return exe
+
     # Which axis of each cache leaf is the cache-length dim (leaves carry a
     # leading stacked-groups axis); mamba state and encoder_out never grow.
     _CACHE_SEQ_AXIS = {"k": 3, "v": 3, "ckv": 2, "k_rope": 2}
+    # Leaves every read of which goes through the kv_len-masked decode
+    # workload: stale bytes past the extent are never consumed, so these
+    # may lease RECYCLED pool buffers without zeroing.  MLA's ckv/k_rope
+    # are absent — its absorbed decode masks scores but not 0*garbage in
+    # the PV contraction, so those always lease fresh zeros.
+    _POOLED_STALE_OK = ("k", "v")
+
+    def _cache_kv_leaves(self, cache: dict):
+        """(entry, name) for every growable (pool-managed) cache leaf."""
+        for key, entry in cache.items():
+            if key == "encoder_out":
+                continue
+            for name in entry:
+                if name in self._CACHE_SEQ_AXIS:
+                    yield entry, name
+
+    def adopt_cache(self, cache: dict) -> None:
+        """Register a prefill-emitted cache's growable leaves as active
+        pool leases (they entered circulation outside ``lease``)."""
+        self.kv_pool.adopt(sum(1 for _ in self._cache_kv_leaves(cache)))
+
+    def release_cache(self, cache: dict) -> None:
+        """Return every growable leaf to the pool — request retirement
+        (and the ``generate`` exception path) funds future leases."""
+        for entry, name in self._cache_kv_leaves(cache):
+            self.kv_pool.release(
+                entry[name], reuse=name in self._POOLED_STALE_OK
+            )
 
     def _grow_cache(self, cache: dict, new_len: int) -> dict:
         """Copy the cache into ``new_len``-long bucket buffers: ONE
         O(true-size) ``dynamic_update_slice`` per growing leaf, only at
-        bucket transitions — never per token.  The grown tail is zeroed
-        (MLA's absorbed decode masks scores but not 0*garbage in its PV
-        contraction; attention leaves would tolerate garbage via kv_len)."""
+        bucket transitions — never per token.  Buffers are LEASED from the
+        kv pool (attention k/v reuse parked buffers as-is — their stale
+        tails sit past kv_len and are never read; MLA's ckv/k_rope lease
+        fresh zeros, see ``_POOLED_STALE_OK``) and the outgrown leaf is
+        released back, so chained growth recycles instead of churning."""
         st = self.decode_stats
+        pool = self.kv_pool
 
         def grow_entry(entry: dict) -> dict:
             out = {}
@@ -308,10 +474,14 @@ class VortexServer:
                     continue
                 shape = list(leaf.shape)
                 shape[ax] = new_len
-                buf = jnp.zeros(tuple(shape), leaf.dtype)
+                stale_ok = name in self._POOLED_STALE_OK
+                buf = pool.lease(
+                    tuple(shape), leaf.dtype, zero=not stale_ok
+                )
                 out[name] = jax.lax.dynamic_update_slice(
                     buf, leaf, (0,) * leaf.ndim
                 )
+                pool.release(leaf, reuse=stale_ok)
                 st.stage_copies += 1
             return out
 
@@ -578,6 +748,10 @@ class VortexServer:
         }
         d = self.decode_stats.as_dict()
         out["decode_step"] = {k: d[k] for k in keep}
+        # The kv-bucket pool's lease ledger (its OWN key set: lease
+        # accounting, not dispatch counters) — ``leases_active`` must read
+        # 0 at idle or a retirement path leaked buffers.
+        out["kv_pool"] = self.kv_pool.stats()
         return out
 
     # -- serving ------------------------------------------------------------
@@ -612,23 +786,30 @@ class VortexServer:
         pos = s - 1
         kvb = self.kv_bucket(sp)  # the prefill-emitted cache length
         st = self.decode_stats
-        for i in range(req.max_new - 1):
-            pos += 1
-            needed = pos + 1  # rows the cache must hold after this step
-            st.calls += 1
-            if needed > kvb and kvb < self.max_cache:
-                kvb = self._grown_kv_bucket(kvb, needed)
-                cache = self._grow_cache(cache, kvb)
-                st.unaligned_calls += 1
-            else:
-                st.aligned_calls += 1
-            logits, cache = self._decode_exec_for(bp, kvb)(
-                self.params, cache, tok, jnp.asarray(pos, jnp.int32)
-            )
-            st.launches += 1
-            nxt = jnp.argmax(logits, -1)
-            out.append(np.asarray(nxt))
-            tok = nxt[:, None]
+        # The prefill-emitted leaves are pool leases from here on: the
+        # finally arm settles them on retirement AND on any exception
+        # mid-decode, so the pool's lease ledger can never leak.
+        self.adopt_cache(cache)
+        try:
+            for i in range(req.max_new - 1):
+                pos += 1
+                needed = pos + 1  # rows the cache must hold after this step
+                st.calls += 1
+                if needed > kvb and kvb < self.max_cache:
+                    kvb = self._grown_kv_bucket(kvb, needed)
+                    cache = self._grow_cache(cache, kvb)
+                    st.unaligned_calls += 1
+                else:
+                    st.aligned_calls += 1
+                logits, cache = self._decode_exec_for(bp, kvb)(
+                    self.params, cache, tok, jnp.asarray(pos, jnp.int32)
+                )
+                st.launches += 1
+                nxt = jnp.argmax(logits, -1)
+                out.append(np.asarray(nxt))
+                tok = nxt[:, None]
+        finally:
+            self.release_cache(cache)
         return np.stack(out, 1)[:b]  # (b, max_new)
 
 
@@ -677,6 +858,13 @@ def main() -> None:
         f"growth_copies={ds.stage_copies} padded={ds.padded_calls}"
     )
     for kind, d in server.engine_dispatch_stats().items():
+        if kind == "kv_pool":  # lease ledger, not dispatch counters
+            print(
+                f"kv_pool: leases_active={d['leases_active']} "
+                f"leases_peak={d['leases_peak']} hits={d['lease_hits']} "
+                f"allocs={d['lease_allocs']} released={d['released']}"
+            )
+            continue
         print(
             f"engine/{kind}: launches={d['launches']} "
             f"stage_copies={d['stage_copies']} "

@@ -170,7 +170,7 @@ def _decode_attend(
     q: jax.Array,       # (b, H, 1, hd)
     k_cache: jax.Array,  # (b, KV, S, hd)
     v_cache: jax.Array,  # (b, KV, S, dv)
-    pos: jax.Array,      # scalar int32 — index of the new token
+    pos: jax.Array,      # i32 index of the new token: scalar or (b,) per-row
     window: int | None,
     softcap: float | None,
     scale: float,
@@ -179,6 +179,8 @@ def _decode_attend(
     b, hq, _, hd = q.shape
     _, hkv, S, _ = k_cache.shape
     group = hq // hkv
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1  # mixed-progress batched decode
 
     # §Perf C: sliding-window layers only ever read the last ``window``
     # positions — slice them out (static size) instead of scoring the whole
@@ -187,26 +189,46 @@ def _decode_attend(
     base = 0
     if window is not None and S > 2 * window:
         start = jnp.clip(pos - window + 1, 0, S - window)
-        k_cache = jax.lax.dynamic_slice(
-            k_cache, (0, 0, start, 0), (b, hkv, window, hd)
-        )
-        v_cache = jax.lax.dynamic_slice(
-            v_cache, (0, 0, start, 0), (b, hkv, window, v_cache.shape[-1])
-        )
+        dv = v_cache.shape[-1]
+        if per_row:
+            # Each row slices ITS OWN window: the slice start is per-row.
+            k_cache = jax.vmap(
+                lambda c, st: jax.lax.dynamic_slice(
+                    c, (0, st, 0), (hkv, window, hd)
+                )
+            )(k_cache, start)
+            v_cache = jax.vmap(
+                lambda c, st: jax.lax.dynamic_slice(
+                    c, (0, st, 0), (hkv, window, dv)
+                )
+            )(v_cache, start)
+            k_pos = start[:, None] + jnp.arange(window)[None]  # (b, window)
+        else:
+            k_cache = jax.lax.dynamic_slice(
+                k_cache, (0, 0, start, 0), (b, hkv, window, hd)
+            )
+            v_cache = jax.lax.dynamic_slice(
+                v_cache, (0, 0, start, 0), (b, hkv, window, dv)
+            )
+            k_pos = start + jnp.arange(window)
         base = start
-        k_pos = start + jnp.arange(window)
         S = window
     else:
-        k_pos = jnp.arange(S)
+        k_pos = (
+            jnp.broadcast_to(jnp.arange(S)[None], (b, S)) if per_row
+            else jnp.arange(S)
+        )
 
     # Engine-served decode: with a session installed, the single-token
     # query dispatches through the kv_len-masked decode workload — the
     # cache is consumed at its (bucketed) length S and the number of valid
-    # rows rides as a runtime scalar, so cache tails past the last written
-    # token may hold ANYTHING (bucket pad, stale bytes) and the selection
-    # is static (S), trace-safe.  The inline math below remains the
-    # bit-identical fallback for sessionless callers (training harnesses,
-    # sharded decode) and for the rare shapes the workload does not cover
+    # rows rides as a runtime scalar (or a (b,) per-row vector under
+    # mixed-progress batched decode: ``pos`` per row, one launch for the
+    # whole batch), so cache tails past the last written token may hold
+    # ANYTHING (bucket pad, stale bytes) and the selection is static (S),
+    # trace-safe.  The inline math below remains the bit-identical
+    # fallback for sessionless callers (training harnesses, sharded
+    # decode) and for the rare shapes the workload does not cover
     # (MLA-style dv != hd, a non-default scale).
     engine = session.installed_engine()
     if (
@@ -222,15 +244,24 @@ def _decode_attend(
 
     # GQA without materializing repeated K/V: fold the group into q's head
     # layout (b, KV, group, 1, hd) and contract against (b, KV, S, hd).
+    # NOTE: this inline fallback masks SCORES only — softmax weight 0 at
+    # masked rows — so cache tails must be finite here (0 * NaN poisons);
+    # the engine path above tolerates garbage tails by zeroing v rows.
     qf = q.astype(jnp.float32).reshape(b, hkv, group, hd)
     kf = k_cache.astype(jnp.float32)
     s = jnp.einsum("bkgd,bksd->bkgs", qf, kf) * scale
     if softcap is not None:
         s = jnp.tanh(s / softcap) * softcap
-    mask = k_pos <= pos
-    if window is not None:
-        mask &= k_pos > pos - window
-    s = jnp.where(mask[None, None, None, :], s, -1e30)
+    if per_row:
+        mask = k_pos <= pos[:, None]  # (b, S)
+        if window is not None:
+            mask &= k_pos > pos[:, None] - window
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+    else:
+        mask = k_pos <= pos
+        if window is not None:
+            mask &= k_pos > pos - window
+        s = jnp.where(mask[None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     vf = v_cache.astype(jnp.float32)
     out = jnp.einsum("bkgs,bksd->bkgd", p, vf)
@@ -363,8 +394,16 @@ def attn_forward(
     if use_rope:
         if mode == "decode":
             assert pos is not None
-            cos, sin = rope_tables(pos[None], hd, cfg.rope_theta)  # (1, hd/2)
-            cos, sin = cos[None, None], sin[None, None]
+            if getattr(pos, "ndim", 0):
+                # Per-row positions: (b,) -> tables (b, 1, hd/2), lifted to
+                # (b, 1, 1, hd/2) so every row rotates at ITS OWN position.
+                cos, sin = rope_tables(pos[:, None], hd, cfg.rope_theta)
+                cos, sin = cos[:, None], sin[:, None]
+            else:
+                cos, sin = rope_tables(
+                    pos[None], hd, cfg.rope_theta
+                )  # (1, hd/2)
+                cos, sin = cos[None, None], sin[None, None]
         else:
             assert positions is not None
             cos, sin = rope_tables(positions, hd, cfg.rope_theta)
@@ -391,12 +430,27 @@ def attn_forward(
                 spec.window, cfg.attn_softcap, scale, rules,
             )
         else:
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0)
-            )
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0)
-            )
+            if getattr(pos, "ndim", 0):
+                # Mixed-progress rows: each row's new K/V lands at ITS OWN
+                # position (vmap over batch — per-row dynamic_update_slice).
+                def row_write(c, new, p_):
+                    return jax.lax.dynamic_update_slice(
+                        c, new, (0, p_, 0)
+                    )
+
+                k_cache = jax.vmap(row_write)(
+                    cache["k"], k.astype(cache["k"].dtype), pos
+                )
+                v_cache = jax.vmap(row_write)(
+                    cache["v"], v.astype(cache["v"].dtype), pos
+                )
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0)
+                )
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0)
+                )
             out = _decode_attend(
                 q, k_cache, v_cache, pos, spec.window, cfg.attn_softcap,
                 scale,
@@ -489,16 +543,34 @@ def mla_forward(
 
     if mode == "decode":
         assert cache is not None and pos is not None
-        cos, sin = rope_tables(pos[None], rope_d, cfg.rope_theta)
-        q_rope = apply_rope(q_rope, cos[None, None], sin[None, None])
-        k_rope = apply_rope(k_rope, cos[None, None], sin[None, None])
-        ckv_c = jax.lax.dynamic_update_slice(
-            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0)
-        )
-        kr_c = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
-            (0, pos, 0),
-        )
+        if getattr(pos, "ndim", 0):
+            # Per-row positions (mixed-progress batched decode): rotate at
+            # and write to each row's OWN position.
+            cos, sin = rope_tables(pos[:, None], rope_d, cfg.rope_theta)
+            q_rope = apply_rope(q_rope, cos[:, None], sin[:, None])
+            k_rope = apply_rope(k_rope, cos[:, None], sin[:, None])
+            ckv_c = jax.vmap(
+                lambda c, new, p_: jax.lax.dynamic_update_slice(
+                    c, new, (p_, 0)
+                )
+            )(cache["ckv"], c_kv.astype(cache["ckv"].dtype), pos)
+            kr_c = jax.vmap(
+                lambda c, new, p_: jax.lax.dynamic_update_slice(
+                    c, new, (p_, 0)
+                )
+            )(cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
+              pos)
+        else:
+            cos, sin = rope_tables(pos[None], rope_d, cfg.rope_theta)
+            q_rope = apply_rope(q_rope, cos[None, None], sin[None, None])
+            k_rope = apply_rope(k_rope, cos[None, None], sin[None, None])
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0)
+            )
+            kr_c = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
+                (0, pos, 0),
+            )
         # Absorbed attention: score_h(t) = q_nope_h . (W_uk_h c_t) + q_rope_h . kr_t
         #                               = (W_uk_h^T q_nope_h) . c_t + ...
         wuk = p["wuk"].reshape(m.kv_lora_rank, H, nope)
@@ -510,8 +582,12 @@ def mla_forward(
                          kr_c.astype(jnp.float32))
         sc = (s_c + s_r) * scale
         S = ckv_c.shape[1]
-        mask = jnp.arange(S) <= pos
-        sc = jnp.where(mask[None, None, None, :], sc, -1e30)
+        if getattr(pos, "ndim", 0):
+            mask = jnp.arange(S)[None] <= pos[:, None]  # (b, S)
+            sc = jnp.where(mask[:, None, None], sc, -1e30)
+        else:
+            mask = jnp.arange(S) <= pos
+            sc = jnp.where(mask[None, None, None, :], sc, -1e30)
         pr = jax.nn.softmax(sc, axis=-1)
         out_c = jnp.einsum("bhqk,bkc->bhqc", pr, ckv_c.astype(jnp.float32))
         wuv = p["wuv"].reshape(m.kv_lora_rank, H, dv)

@@ -247,6 +247,9 @@ def forward(
       tokens: (b, s) int32 — s == 1 in decode mode.
       mode: "train" | "prefill" | "decode".
       cache/pos: decode state (cache from make_cache / a prior prefill).
+        ``pos`` is a scalar i32 (every batch row at the same position) or
+        a (b,) i32 vector giving each row its OWN position — one decode
+        step serving rows at mixed progress (continuous batching).
       vision_embeds: (b, vision_prefix, d) precomputed patch embeddings
         (VLM frontend stub) — overwrite the first positions' embeddings.
       encoder_frames: (b, encoder_seq, d) precomputed audio-frame embeddings
@@ -260,15 +263,21 @@ def forward(
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * math.sqrt(d)).astype(x.dtype)
     if not cfg.use_rope:
-        # Sinusoidal absolute positions (whisper-style backbone).
-        p_idx = (
-            pos[None] if mode == "decode" else jnp.arange(s)
-        ).astype(jnp.float32)
+        # Sinusoidal absolute positions (whisper-style backbone).  Decode
+        # ``pos`` may be a scalar (whole batch at one position) or a (b,)
+        # per-row vector (mixed-progress batched decode): p_idx is kept
+        # 2-D (rows, s) with rows in {1, b} so pe broadcasts either way.
+        if mode == "decode":
+            p = jnp.asarray(pos)
+            p_idx = (p.reshape(1, 1) if p.ndim == 0 else p[:, None])
+        else:
+            p_idx = jnp.arange(s)[None]
+        p_idx = p_idx.astype(jnp.float32)
         half = d // 2
         freq = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
-        ang = p_idx[:, None] * freq
+        ang = p_idx[..., None] * freq
         pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
-        x = x + pe[None].astype(x.dtype)
+        x = x + pe.astype(x.dtype)
     if vision_embeds is not None and mode != "decode":
         nv = vision_embeds.shape[1]
         x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)

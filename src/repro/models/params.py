@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Callable
 
 import jax
@@ -262,7 +263,10 @@ def _init_one(path: str, d: ParamDef, key: jax.Array) -> jax.Array:
         return jnp.log(a).astype(dtype)
     fan_in = d.shape[d.scale_axis] if d.scale_axis < len(d.shape) else d.shape[-1]
     # Fold the path into the key so every tensor gets an independent stream.
-    sub = jax.random.fold_in(key, hash(path) & 0x7FFFFFFF)
+    # crc32, NOT hash(): str hashing is PYTHONHASHSEED-randomized, which made
+    # init_params emit different weights in every process (and bit-identity
+    # tests flake on the draws that land on rounding boundaries).
+    sub = jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
     std = 1.0 / math.sqrt(max(fan_in, 1))
     return (jax.random.normal(sub, d.shape, jnp.float32) * std).astype(dtype)
 
