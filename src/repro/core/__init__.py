@@ -10,6 +10,15 @@ from repro.core.analyzer import (
     WallClockProfiler,
 )
 from repro.core.baselines import SampleDrivenCompiler, VendorBaseline
+from repro.core.calibrate import (
+    BucketMeasurement,
+    CalibrationPolicy,
+    Calibrator,
+    calibration_cache_dir,
+    fingerprint_key,
+    hardware_fingerprint,
+    lattice_checksum,
+)
 from repro.core.candidates import (
     CandidateLattice,
     filter_by_isa,
@@ -47,6 +56,7 @@ from repro.core.selection_table import (
     merge_breakpoints,
 )
 from repro.core.selector import RuntimeSelector, Selection, SelectorStats
+from repro.core.timing import MinTimings, interleaved_minima, retry_best
 from repro.core.workloads import (
     WORKLOADS,
     AttentionWorkload,

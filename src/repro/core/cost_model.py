@@ -163,6 +163,7 @@ def runtime_cost_matrix(
     l1_costs: np.ndarray,
     ms: np.ndarray,
     num_cores: int = 1,
+    cost_scale: np.ndarray | None = None,
 ) -> np.ndarray:
     """Fused Eq. 2-4 sweep: C candidates x B runtime extents -> (C, B).
 
@@ -172,6 +173,12 @@ def runtime_cost_matrix(
     covers the whole multi-backend strategy space.  ``ms`` is a vector of
     dynamic extents; the offline table builder passes every breakpoint at
     once, the runtime argmin fallback passes a single element.
+
+    ``cost_scale`` is an optional (C,) per-candidate multiplier on the
+    final cost — the background calibrator's refined per-backend
+    coefficients (core/calibrate.py).  A constant scale preserves the
+    piecewise-constant-in-M structure (breakpoints are unchanged), so a
+    calibrated selection table is built by the exact same sweep.
 
     Every arithmetic op is elementwise, so the (C,) column at ``ms=[m]`` is
     bit-identical to the same column of a wider sweep containing ``m`` —
@@ -193,9 +200,10 @@ def runtime_cost_matrix(
     t_tile = t_load + np.maximum(gk - 1.0, 0.0) * np.maximum(t_load, body) \
         + body + t_store
     f_parallel = np.ceil(gm * gn / max(num_cores, 1))
-    return np.broadcast_to(
-        f_parallel * t_tile, (l1_tiles.shape[0], ms.shape[0])
-    )
+    out = f_parallel * t_tile
+    if cost_scale is not None:
+        out = out * np.asarray(cost_scale, np.float64)[:, None]
+    return np.broadcast_to(out, (l1_tiles.shape[0], ms.shape[0]))
 
 
 def runtime_costs(
@@ -205,6 +213,7 @@ def runtime_costs(
     l1_costs: np.ndarray,
     m_runtime: int,
     num_cores: int = 1,
+    cost_scale: np.ndarray | None = None,
 ) -> np.ndarray:
     """Vectorized layer-2 cost over many layer-1 candidates at runtime.
 
@@ -215,7 +224,8 @@ def runtime_costs(
     keeping selection overhead at the microsecond scale Fig. 14 demands).
     """
     return runtime_cost_matrix(
-        hw, wl, l1_tiles, l1_costs, np.asarray([m_runtime]), num_cores
+        hw, wl, l1_tiles, l1_costs, np.asarray([m_runtime]), num_cores,
+        cost_scale,
     )[:, 0]
 
 

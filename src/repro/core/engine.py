@@ -466,6 +466,17 @@ class VortexKernel:
     def workload(self) -> Workload:
         return self._wl
 
+    @property
+    def impl(self) -> str:
+        """Executable implementation ("xla"/"pallas") — what the background
+        calibrator builds candidate executables with, so measured costs
+        price the SAME lowering the serving path launches."""
+        return self._impl
+
+    @property
+    def interpret(self) -> bool:
+        return self._interpret
+
     # -- executable construction ------------------------------------------
 
     def _build_executable(self, sel: Selection, args: tuple) -> _CacheEntry:
@@ -822,6 +833,8 @@ class VortexKernel:
             "mean_select_us": s.mean_select_us,
             "table_builds": s.table_builds,
             "table_build_seconds": s.table_build_seconds,
+            "calibration_seconds": s.calibration_seconds,
+            "table_swaps": s.table_swaps,
         }
 
 

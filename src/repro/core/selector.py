@@ -81,6 +81,12 @@ class SelectorStats:
     select_seconds: float = 0.0          # argmin-path time only
     table_builds: int = 0
     table_build_seconds: float = 0.0
+    # Background-calibration accounting (core/calibrate.py): wall-clock
+    # spent measuring/refitting on behalf of this selector, and how many
+    # times a rebuilt table was atomically swapped in.  Off the serving
+    # path entirely — the hot-path counters above never include these.
+    calibration_seconds: float = 0.0
+    table_swaps: int = 0
 
     @property
     def cache_hits(self) -> int:
@@ -132,6 +138,13 @@ class RuntimeSelector:
         self._table_m_max = table_m_max
         self._table_extend_limit = table_extend_limit
         self.stats = SelectorStats()
+        # Calibration state (core/calibrate.py): a per-candidate cost
+        # multiplier and measured-bucket winner pins.  Both None/empty by
+        # default — the analytical sweep runs bit-identically — and only
+        # replaced through install_table(), so doubling extensions rebuild
+        # with the SAME refined model the installed table was built from.
+        self._cost_scale: np.ndarray | None = None
+        self._pinned: dict[int, int] = {}
         # Built lazily on first use: throwaway selectors (benchmarks,
         # analysis scripts) shouldn't pay the breakpoint sweep up front.
         self._table: SelectionTable | None = None
@@ -160,11 +173,18 @@ class RuntimeSelector:
         charges a sweep to an idle selector."""
         return self._table
 
+    @property
+    def stacked(self) -> StackedLattices:
+        """The fused multi-backend candidate stack (what the background
+        calibrator ranks, measures and refits over)."""
+        return self._stacked
+
     # -- offline table ------------------------------------------------------
 
     def _build_table(self, m_max: int) -> SelectionTable:
         table = build_selection_table(
-            self._hw, self._wl, self._stacked, m_max, self._num_cores
+            self._hw, self._wl, self._stacked, m_max, self._num_cores,
+            cost_scale=self._cost_scale, pinned=self._pinned or None,
         )
         self.stats.table_builds += 1
         self.stats.table_build_seconds += table.build_seconds
@@ -220,12 +240,18 @@ class RuntimeSelector:
         return sel
 
     def _select_argmin(self, m_runtime: int) -> Selection:
-        """One fused numpy evaluation over ALL backends' candidates."""
+        """One fused numpy evaluation over ALL backends' candidates.
+
+        Applies the installed calibration scale (if any) so the beyond-
+        table fallback and doubling extensions stay consistent with the
+        calibrated table contents; winner pins are table-only (they live
+        inside the calibrated coverage by construction).
+        """
         t0 = time.perf_counter()
         st = self._stacked
         costs = runtime_costs(
             self._hw, self._wl, st.l1_tiles, st.l1_costs,
-            m_runtime, self._num_cores,
+            m_runtime, self._num_cores, self._cost_scale,
         )
         idx = int(np.argmin(costs))
         strategy = st.strategy_for(idx)
@@ -245,6 +271,102 @@ class RuntimeSelector:
             predicted_cost=float(costs[idx]),
             select_seconds=time.perf_counter() - t0,
         )
+
+    # -- calibration surface (core/calibrate.py) -----------------------------
+
+    def candidate_selection(self, idx: int, m_runtime: int) -> Selection:
+        """The Selection candidate ``idx`` (stacked index) would serve at
+        extent ``m_runtime`` — what the calibrator builds executables for
+        when timing non-winning candidates.  ``predicted_cost`` is the
+        UNSCALED analytical cost; ``select_seconds`` is 0."""
+        st = self._stacked
+        strategy = st.strategy_for(idx)
+        m1, n1, k1 = strategy.l1
+        M, N, K = self._wl.runtime_dims(m_runtime)
+        grid = (
+            math.ceil(M / m1),
+            math.ceil(N / n1),
+            math.ceil(K / k1),
+        )
+        return Selection(
+            strategy=strategy,
+            backend=st.backend_of(idx),
+            grid=grid,
+            padded_m=grid[0] * m1,
+            bucket=self._wl.bucket_dims(grid, strategy.l1),
+            predicted_cost=float(self.candidate_costs(m_runtime)[idx]),
+            select_seconds=0.0,
+        )
+
+    def candidate_costs(self, m_runtime: int) -> np.ndarray:
+        """(C,) UNSCALED analytical costs at ``m_runtime`` — the paper's
+        Eq. 2-4 ranking the calibrator takes its top-K from."""
+        st = self._stacked
+        return runtime_costs(
+            self._hw, self._wl, st.l1_tiles, st.l1_costs,
+            m_runtime, self._num_cores,
+        )
+
+    def rank_candidates(self, m_runtime: int, k: int) -> list[int]:
+        """Indices of the ``k`` analytically-cheapest candidates at
+        ``m_runtime``, cheapest first (the calibrator's measurement set)."""
+        costs = self.candidate_costs(m_runtime)
+        k = min(max(int(k), 1), costs.shape[0])
+        top = np.argpartition(costs, k - 1)[:k]
+        return [int(i) for i in top[np.argsort(costs[top])]]
+
+    def build_calibrated_table(
+        self,
+        m_max: int | None = None,
+        cost_scale: np.ndarray | None = None,
+        pinned: Mapping[int, int] | None = None,
+    ) -> SelectionTable:
+        """Build (OFFLINE — nothing installed, serving untouched) a table
+        from the refined model: per-candidate ``cost_scale`` multipliers
+        plus measured-bucket winner ``pinned`` overrides."""
+        table = self.table
+        m_max = m_max if m_max is not None else (
+            table.m_max if table is not None else self._table_m_max or 1
+        )
+        built = build_selection_table(
+            self._hw, self._wl, self._stacked, m_max, self._num_cores,
+            cost_scale=cost_scale,
+            pinned=dict(pinned) if pinned else None,
+        )
+        self.stats.table_builds += 1
+        self.stats.table_build_seconds += built.build_seconds
+        return built
+
+    def install_table(
+        self,
+        table: SelectionTable,
+        *,
+        cost_scale: np.ndarray | None = None,
+        pinned: Mapping[int, int] | None = None,
+        calibration_seconds: float = 0.0,
+    ) -> None:
+        """ATOMICALLY swap a fully-built table into the serving hot path.
+
+        The swap protocol (DESIGN.md §10): install the refined model first
+        (so the argmin fallback and any future doubling extension rebuild
+        consistently), drop the LRU (its entries priced the old model),
+        then publish the table with ONE reference assignment — readers go
+        through a single ``self._table`` load per select, and
+        SelectionTable is frozen, so there is no torn state to observe:
+        every concurrent select sees entirely the old table or entirely
+        the new one.  The bisect lookup itself is byte-for-byte untouched.
+        """
+        if not table.starts or table.starts[0] != 1:
+            raise ValueError("selection table must cover extents from 1")
+        self._cost_scale = (
+            None if cost_scale is None
+            else np.asarray(cost_scale, np.float64)
+        )
+        self._pinned = dict(pinned) if pinned else {}
+        self._cache.clear()
+        self._table = table  # the atomic publish
+        self.stats.table_swaps += 1
+        self.stats.calibration_seconds += calibration_seconds
 
     # -- sample-free precompilation set --------------------------------------
 

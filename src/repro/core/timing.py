@@ -1,0 +1,141 @@
+"""Phase-robust wall-clock timing: interleaved adaptive min-vs-min.
+
+Shared hosts (CI runners, serving machines under co-tenant load) throttle
+in long (~0.5-1.5s) phases during which even IDENTICAL computations run 2x
+slower, and the phase can anti-correlate with a naive A/B alternation.
+Mean or median of either side is therefore phase lottery.  The harness
+here — proven by the bench gates in benchmarks/bench_workloads.py and now
+shared with the background calibrator (core/calibrate.py) — defends with
+three mechanisms:
+
+  * INTERLEAVED short windows: every round times each variant back to
+    back, so a throttling phase inflates all variants the same round
+    instead of biasing one side;
+  * MIN-VS-MIN with adaptive stop: sampling continues until every
+    variant's minimum has stopped improving for ``patience`` rounds —
+    each variant has then provably sampled the clean phase — and only the
+    minima are compared;
+  * RETRY KEEPING BEST (:func:`retry_best`): throttling noise is strictly
+    one-sided (it can only inflate a window), so re-measuring and keeping
+    the best attempt estimates the true cost, while a real regression
+    fails every attempt.
+
+All timings are seconds; per-round samples are kept in microseconds so a
+flaky gate can be diagnosed from committed JSON (was the distribution
+bimodal throttling or a real shift?).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+
+__all__ = ["MinTimings", "interleaved_minima", "retry_best"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MinTimings:
+    """Result of one :func:`interleaved_minima` measurement.
+
+    ``best_s[i]`` is variant ``i``'s best per-call seconds across all
+    rounds; ``samples_us[i]`` its raw per-round means (microseconds,
+    rounded to ns precision) in measurement order — the flake audit
+    trail.  ``rounds`` is how many rounds actually ran before the
+    adaptive stop.
+    """
+
+    best_s: tuple[float, ...]
+    samples_us: tuple[tuple[float, ...], ...]
+    rounds: int
+
+    def ratio(self, i: int, j: int) -> float:
+        """best_s[i] / best_s[j] (guarded against a zero denominator)."""
+        return self.best_s[i] / max(self.best_s[j], 1e-12)
+
+
+def interleaved_minima(
+    calls: Sequence[Callable[[], object]],
+    *,
+    inner: int = 2,
+    min_rounds: int = 20,
+    max_rounds: int = 80,
+    patience: int = 10,
+    improvement: float = 0.99,
+    warmup: bool = True,
+    deadline_s: float | None = None,
+) -> MinTimings:
+    """Phase-robust minima for N variants, interleaved per round.
+
+    Each round times ``inner`` back-to-back calls of every variant (each
+    call synchronized via ``jax.block_until_ready``).  A round that
+    improves ANY variant's minimum by more than ``1 - improvement``
+    resets the staleness counter; the loop stops once at least
+    ``min_rounds`` ran and no minimum improved for ``patience``
+    consecutive rounds (or at ``max_rounds``/``deadline_s``, whichever
+    first).  ``warmup`` runs one untimed call per variant first so
+    compilation and buffer allocation never land inside a timed window.
+    """
+    if not calls:
+        raise ValueError("need at least one variant to time")
+    if warmup:
+        for fn in calls:
+            jax.block_until_ready(fn())
+    n = len(calls)
+    best = [float("inf")] * n
+    samples: list[list[float]] = [[] for _ in range(n)]
+    stale = 0
+    rounds = 0
+    t_start = time.perf_counter()
+    for r in range(max_rounds):
+        improved = False
+        for i, fn in enumerate(calls):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                jax.block_until_ready(fn())
+            t = (time.perf_counter() - t0) / inner
+            samples[i].append(round(t * 1e6, 3))
+            if t < best[i] * improvement:
+                improved = True
+            best[i] = min(best[i], t)
+        rounds = r + 1
+        stale = 0 if improved else stale + 1
+        if rounds >= min_rounds and stale >= patience:
+            break
+        if (
+            deadline_s is not None
+            and time.perf_counter() - t_start >= deadline_s
+            and all(b != float("inf") for b in best)
+        ):
+            break
+    return MinTimings(
+        best_s=tuple(best),
+        samples_us=tuple(tuple(s) for s in samples),
+        rounds=rounds,
+    )
+
+
+def retry_best(
+    measure: Callable[[], object],
+    *,
+    attempts: int = 4,
+    accept: Callable[[object], bool],
+    key: Callable[[object], float],
+):
+    """Re-run ``measure`` until ``accept`` holds or ``attempts`` exhaust,
+    keeping the attempt with the smallest ``key``.
+
+    The bench wraps its aligned-vs-unaligned ratio measurement with this
+    (accept = ratio under the gate, key = the ratio): throttling can only
+    inflate a window, so min-across-attempts estimates the true value
+    while a genuine regression fails every attempt.
+    """
+    best = measure()
+    for _ in range(max(attempts, 1) - 1):
+        if accept(best):
+            break
+        cur = measure()
+        if key(cur) < key(best):
+            best = cur
+    return best

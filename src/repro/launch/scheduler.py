@@ -110,7 +110,7 @@ class ContinuousScheduler:
         self.kvb = 0
         self.stats = {
             "steps": 0, "launches": 0, "padded_calls": 0,
-            "admitted": 0, "retired": 0,
+            "admitted": 0, "retired": 0, "calibration_slices": 0,
         }
         # Per-step active-row positions (and the bucket they ran at), the
         # evidence the staggering tests read: one entry per launch.
@@ -283,6 +283,12 @@ class ContinuousScheduler:
             if row is not None
         ]
         if not active:
+            # Fully idle tick: donate one budgeted slice to the engine's
+            # background calibrator (config.calibration="on-idle").  The
+            # donation deliberately does NOT count as work — drain()'s
+            # termination depends only on request progress, so a pending
+            # calibration never keeps drain() spinning.
+            self._donate_idle_slice()
             return worked
         assert self.cache is not None
 
@@ -318,6 +324,25 @@ class ContinuousScheduler:
             if row.stop is not None and t == row.stop:
                 row.remaining = 0
         return True
+
+    def _donate_idle_slice(self) -> None:
+        """With no queued requests and no active rows, give the engine's
+        background calibrator one budgeted measurement slice (bounded by
+        ``EngineConfig.calibration_budget_s``).  No-op when calibration is
+        off or nothing is pending; never raises into the serving loop."""
+        engine = getattr(self.server, "engine", None)
+        cal = getattr(engine, "calibrator", None)
+        if cal is None:
+            return
+        with self._lock:
+            if self._queue:
+                return
+        try:
+            if cal.pending():
+                cal.run_slice()
+                self.stats["calibration_slices"] += 1
+        except Exception:
+            pass
 
     def drain(self) -> dict[int, np.ndarray]:
         """Run steps until queue and slots are empty; return (and clear)

@@ -742,9 +742,11 @@ class VortexServer:
             "stage_copies", "unstage_copies", "padded_calls",
             "traced_calls", "forwarded", "realize_slices",
         )
+        estats = self.engine.stats()
         out = {
             kind: {k: s[k] for k in keep}
-            for kind, s in self.engine.stats().items()
+            for kind, s in estats.items()
+            if kind != "calibration"  # engine-level section, not a kind
         }
         d = self.decode_stats.as_dict()
         out["decode_step"] = {k: d[k] for k in keep}
@@ -752,6 +754,9 @@ class VortexServer:
         # accounting, not dispatch counters) — ``leases_active`` must read
         # 0 at idle or a retirement path leaked buffers.
         out["kv_pool"] = self.kv_pool.stats()
+        # Background-calibration counters (core/calibrate.py), engine-level
+        # like kv_pool: applied/loaded tables, swaps, measurement time.
+        out["calibration"] = estats["calibration"]
         return out
 
     # -- serving ------------------------------------------------------------
@@ -864,6 +869,14 @@ def main() -> None:
                 f"leases_peak={d['leases_peak']} hits={d['lease_hits']} "
                 f"allocs={d['lease_allocs']} released={d['released']}"
             )
+            continue
+        if kind == "calibration":  # engine-level counters, not a kind
+            if d.get("enabled"):
+                print(
+                    f"calibration: mode={d['mode']} applied={d['applied']} "
+                    f"loaded={d['loaded_from_disk']} swaps={d['table_swaps']} "
+                    f"seconds={d['seconds']:.3f}"
+                )
             continue
         print(
             f"engine/{kind}: launches={d['launches']} "

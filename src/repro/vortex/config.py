@@ -46,6 +46,18 @@ class EngineConfig:
       evicts the least-recently-used idle set, so burst concurrency can't
       pin device memory forever.  0 retains nothing (every unaligned call
       allocates transient buffers); in-flight sets are never evicted.
+    * ``calibration`` — background measurement-refined tables (DESIGN.md
+      §10): ``"off"`` (default; the serving path is bit-identical to an
+      uncalibrated engine), ``"on-idle"`` (the continuous scheduler
+      donates budgeted slices when its admission queue is empty), or
+      ``"eager-warmup"`` (each kernel is calibrated — persisted tables
+      loaded from disk first — as it is built).
+    * ``calibration_top_k`` / ``calibration_budget_s`` — how many
+      analytically-ranked candidates to measure per bucket, and the
+      wall-clock bound of ONE donated idle slice.
+    * ``calibration_cache_dir`` — where calibrated tables persist, keyed
+      by hardware fingerprint (None = ``$VORTEX_CACHE_DIR`` or
+      ``~/.cache/vortex``; never inside the repo).
     """
 
     hardware: str = "host_cpu"
@@ -59,6 +71,10 @@ class EngineConfig:
     precompile_m_max: int = 0
     staging: bool = True
     staging_pool_cap: int = 4
+    calibration: str = "off"
+    calibration_top_k: int = 3
+    calibration_budget_s: float = 0.25
+    calibration_cache_dir: str | None = None
 
     def __post_init__(self) -> None:
         if self.backends is not None:
@@ -66,4 +82,9 @@ class EngineConfig:
         if self.empirical_levels is not None:
             object.__setattr__(
                 self, "empirical_levels", tuple(self.empirical_levels)
+            )
+        if self.calibration not in ("off", "on-idle", "eager-warmup"):
+            raise ValueError(
+                f"calibration must be 'off', 'on-idle' or 'eager-warmup', "
+                f"got {self.calibration!r}"
             )

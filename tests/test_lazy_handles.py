@@ -468,6 +468,8 @@ def _engine_chain_stats(server) -> dict:
         "forwarded": 0, "launches": 0,
     }
     for kind, st in server.engine.stats().items():
+        if kind == "calibration":  # engine-level section, not a kind
+            continue
         for key in agg:
             agg[key] += st[key]
     return agg
@@ -572,6 +574,6 @@ def test_chained_unsupported_arch_reports_fallback():
 def test_engine_dispatch_stats_surfaces_chain_counters(chained_server):
     stats = chained_server.engine_dispatch_stats()
     for kind, st in stats.items():
-        if kind == "kv_pool":  # lease ledger, not dispatch counters
+        if kind in ("kv_pool", "calibration"):  # engine-level sections
             continue
         assert "forwarded" in st and "realize_slices" in st, kind
