@@ -241,11 +241,13 @@ def _bench_hot_path(smoke: bool) -> dict[str, dict]:
         # noise is strictly one-sided (it can only inflate a window), so
         # the min across attempts estimates the true boundary cost, while
         # a real regression fails every attempt.
+        gate: dict = {}
         aligned_us, unaligned_us, ratio, samples = retry_best(
             lambda: paired_us(aligned_call, unaligned_call),
             attempts=4,
             accept=lambda r: r[2] <= 1.08,
             key=lambda r: r[2],
+            stats=gate,
         )
         after = eng.stats()[kind]
         calls = after["calls"] - before["calls"]
@@ -257,6 +259,19 @@ def _bench_hot_path(smoke: bool) -> dict[str, dict]:
             # The gated attempt's raw per-round samples (same order the
             # minima were taken over) — the flake audit trail.
             "samples": samples,
+            # Gate retry telemetry (DESIGN.md §11 robustness surface):
+            # how many measurement attempts the gate burned, whether the
+            # kept attempt passed, and which interleaved round each side's
+            # min-vs-min winner came from.
+            "gate_attempts": gate.get("attempts", 1),
+            "gate_accepted": gate.get("accepted", True),
+            "min_round": {
+                side: int(np.argmin(vals)) for side, vals in samples.items()
+            },
+            # Zero-overhead guard: a no-fault bench must never touch the
+            # degradation ladder.  CI asserts both stay 0.
+            "fallbacks": after["fallbacks"] - before["fallbacks"],
+            "quarantined": after["quarantined"] - before["quarantined"],
             "launches_per_call": (
                 (after["launches"] - before["launches"]) / max(calls, 1)
             ),

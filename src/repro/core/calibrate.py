@@ -56,6 +56,7 @@ from repro.core.analyzer import StackedLattices
 from repro.core.engine import VortexKernel
 from repro.core.timing import interleaved_minima
 from repro.core.workloads import Workload
+from repro.runtime import faults
 
 __all__ = [
     "CalibrationPolicy",
@@ -226,8 +227,8 @@ class Calibrator:
         self.counters = {
             "measurements": 0, "measured_buckets": 0, "fits": 0,
             "reranks": 0, "table_swaps": 0, "loads": 0, "saves": 0,
-            "load_rejects": 0, "save_errors": 0, "slices": 0,
-            "seconds": 0.0,
+            "load_rejects": 0, "save_errors": 0, "store_rejects": 0,
+            "slices": 0, "seconds": 0.0,
         }
 
     # -- planning -----------------------------------------------------------
@@ -294,6 +295,8 @@ class Calibrator:
         """Time the top-K analytically-ranked candidates at extent ``m``
         through per-bucket AOT executables (the same lowering serving
         launches), interleaved min-vs-min."""
+        if faults.ACTIVE is not None:
+            faults.ACTIVE.check("calib_measure")
         import jax
 
         pol = self.policy
@@ -468,11 +471,14 @@ class Calibrator:
             self.save()
         except Exception:
             self.counters["save_errors"] += 1
+            self.counters["store_rejects"] += 1
 
     def save(self, path: str | None = None) -> str:
         """Persist every applied calibration (atomic tmp + os.replace —
         a reader never observes a partial file from a clean writer;
         killed-mid-write leftovers are caught by load's recovery)."""
+        if faults.ACTIVE is not None:
+            faults.ACTIVE.check("cache_io")
         with self._lock:
             payload = {
                 "version": _SCHEMA_VERSION,
@@ -509,6 +515,8 @@ class Calibrator:
             tmp = path + ".tmp"
             with open(tmp, "w") as f:
                 json.dump(payload, f, indent=1, sort_keys=True)
+            if faults.ACTIVE is not None:
+                faults.ACTIVE.check("cache_io")
             os.replace(tmp, path)
             self.counters["saves"] += 1
             return path
@@ -529,6 +537,8 @@ class Calibrator:
             except RuntimeError:
                 return 0
             try:
+                if faults.ACTIVE is not None:
+                    faults.ACTIVE.check("cache_io")
                 with open(path) as f:
                     data = json.load(f)
                 if data.get("version") != _SCHEMA_VERSION:

@@ -47,6 +47,7 @@ from repro.core.candidates import generate_lattice
 from repro.core.hardware import HardwareSpec
 from repro.core.selector import RuntimeSelector, Selection
 from repro.core.workloads import Workload
+from repro.runtime import faults
 
 __all__ = [
     "DispatchStats",
@@ -109,6 +110,11 @@ class DispatchStats:
     NO restage; ``realize_slices`` counts deferred output slices forced by
     a non-engine consumer (``LazyBucket.realize``).  Whole-chain boundary
     traffic is exactly ``stage_copies + unstage_copies + realize_slices``.
+
+    ``quarantined`` counts candidates the degradation ladder denylisted
+    after a precompile/launch failure; ``fallbacks`` counts dispatches
+    that exhausted the lattice retries and ran the XLA reference rung.
+    Both are zero on every healthy host (DESIGN.md §11).
     """
 
     calls: int = 0
@@ -121,6 +127,8 @@ class DispatchStats:
     traced_calls: int = 0
     forwarded: int = 0
     realize_slices: int = 0
+    fallbacks: int = 0
+    quarantined: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -377,6 +385,8 @@ class _CacheEntry:
     pool: _StagingPool = dataclasses.field(default_factory=_StagingPool)
 
     def run(self, *args):
+        if faults.ACTIVE is not None:
+            faults.ACTIVE.check("aot_launch")
         if self.aot is not None and len(args) == len(self.aot_dtypes):
             for a, d in zip(args, self.aot_dtypes):
                 if getattr(a, "dtype", None) != d:
@@ -416,6 +426,8 @@ class VortexKernel:
         table_extend_limit: int = 1 << 17,
         staging: bool = True,
         staging_pool_cap: int = 4,
+        max_retries: int = 2,
+        denylist=None,
     ):
         self._hw = hw
         self._wl = wl
@@ -423,6 +435,19 @@ class VortexKernel:
         self._interpret = interpret
         self._staging = staging and wl.supports_staging
         self._pool_cap = staging_pool_cap
+        self._max_retries = max(int(max_retries), 0)
+        # The degradation ladder's quarantine (DESIGN.md §11): string keys
+        # of candidates that failed at precompile or launch on THIS host.
+        # Seeded from the persisted denylist (same fingerprint key as the
+        # calibration cache) so restarts never re-fail a known-bad
+        # candidate; empty on every healthy host, so the hot path pays one
+        # falsy set check.
+        self._denylist = denylist
+        self._sig_key = repr(wl.signature)
+        self._quarantined: set[str] = (
+            set(denylist.get(self._sig_key)) if denylist is not None
+            else set()
+        )
         self.dispatch_stats = DispatchStats()
         t0 = time.perf_counter()
         backends = backends or tuple(hw.backends)
@@ -480,6 +505,8 @@ class VortexKernel:
     # -- executable construction ------------------------------------------
 
     def _build_executable(self, sel: Selection, args: tuple) -> _CacheEntry:
+        if faults.ACTIVE is not None:
+            faults.ACTIVE.check("precompile")
         fn = self._wl.build_executable(
             sel, impl=self._impl, interpret=self._interpret
         )
@@ -608,6 +635,12 @@ class VortexKernel:
         — best-effort: reference-path calls (tracers, staging disabled)
         still return plain finalized arrays, so chain drivers must accept
         both.
+
+        A candidate that raises at executable build or launch walks the
+        degradation ladder (``_degrade``): quarantine, re-select the
+        next-best lattice candidate, retry up to ``max_retries``, then the
+        XLA reference rung — the call still returns a correct result
+        whenever any rung works.
         """
         wl = self._wl
         if any(isinstance(a, LazyBucket) for a in args):
@@ -623,7 +656,16 @@ class VortexKernel:
             if handles:
                 return self._call_forwarded(args, handles, lazy)
         m = wl.dynamic_extent(*args)
-        sel = self.selector.select(m)
+        sel = self._select_healthy(m)
+        try:
+            return self._dispatch(sel, m, args, lazy)
+        except Exception as exc:
+            return self._degrade(m, sel, args, lazy, exc)
+
+    def _dispatch(self, sel: Selection, m: int, args: tuple, lazy: bool):
+        """One dispatch attempt at a fixed Selection (the ladder's rung
+        body; exactly the pre-ladder dispatch path)."""
+        wl = self._wl
         entry = self._entry_for(sel, args)
         st = self.dispatch_stats
         view = wl.stage_view(*args)
@@ -675,12 +717,123 @@ class VortexKernel:
             # the handle.
             if wl.unstages and not lazy_out:
                 st.unstage_copies += 1
-        out = entry.run(*staged, *scalars)
-        entry.pool.release(bufs)
+        try:
+            out = entry.run(*staged, *scalars)
+        finally:
+            # Settle the staging-pool checkout on the failure path too: a
+            # launch that raises (degradation ladder) must not strand the
+            # buffer set — the staged buffers stay valid (the launch does
+            # not donate them), so they go straight back into rotation.
+            entry.pool.release(bufs)
         if lazy_out:
             return LazyBucket(out, m, wl.staged_out_axis, st,
                               self._stats_lock)
         return wl.finalize(sel, out, *args)
+
+    # -- degradation ladder (DESIGN.md §11) ---------------------------------
+
+    @staticmethod
+    def _qkey(sel: Selection) -> str:
+        """The quarantine identity of a candidate: what failed is the
+        (bucket, backend, tiling) triple — the executable the lattice
+        produced — not the runtime extent that happened to trigger it."""
+        return repr((sel.bucket, sel.backend, sel.strategy.tiles))
+
+    def _select_healthy(self, m: int) -> Selection:
+        """The table/argmin selection, skipping quarantined candidates.
+
+        The quarantine set is empty on every healthy host, so the hot path
+        pays one falsy check on top of the plain ``select``.
+        """
+        sel = self.selector.select(m)
+        q = self._quarantined
+        if q and self._qkey(sel) in q:
+            healthy = self.selector.select_excluding(m, q, self._qkey)
+            if healthy is not None:
+                return healthy
+        return sel
+
+    def _quarantine(self, sel: Selection) -> bool:
+        """Quarantine ``sel``; True if it was not already quarantined."""
+        key = self._qkey(sel)
+        if key in self._quarantined:
+            return False
+        with self._stats_lock:
+            self.dispatch_stats.quarantined += 1
+        self._quarantined.add(key)
+        return True
+
+    def _degrade(
+        self, m: int, sel: Selection, args: tuple, lazy: bool,
+        exc: Exception,
+    ):
+        """Walk the ladder after ``sel`` failed: quarantine it, re-select
+        the next-best lattice candidate excluding quarantined entries,
+        retry up to ``max_retries``, then run the XLA reference rung.
+
+        Quarantine keys are persisted to the denylist only once a LOWER
+        rung succeeds — evidence the failure was candidate-specific rather
+        than a caller error (bad dtypes, shape mismatch) that every
+        candidate would reproduce.  If even the reference rung fails, this
+        call's quarantines are rolled back and the original exception
+        propagates: nothing was learned about the candidates.
+        """
+        fresh = [sel] if self._quarantine(sel) else []
+        for _ in range(self._max_retries):
+            nxt = self.selector.select_excluding(
+                m, self._quarantined, self._qkey
+            )
+            if nxt is None:
+                break  # lattice exhausted: straight to the reference rung
+            try:
+                out = self._dispatch(nxt, m, args, lazy)
+            except Exception as e:
+                exc = e
+                if self._quarantine(nxt):
+                    fresh.append(nxt)
+                continue
+            self._persist_quarantines(fresh)
+            return out
+        try:
+            out = self._fallback_dispatch(m, args)
+        except Exception as e:
+            with self._stats_lock:
+                self.dispatch_stats.quarantined -= len(fresh)
+            for t in fresh:
+                self._quarantined.discard(self._qkey(t))
+            raise e from exc
+        self._persist_quarantines(fresh)
+        return out
+
+    def _persist_quarantines(self, fresh: list[Selection]) -> None:
+        if self._denylist is None:
+            return
+        for t in fresh:
+            self._denylist.add(self._sig_key, self._qkey(t))
+
+    def _fallback_dispatch(self, m: int, args: tuple):
+        """The last rung: a plain jitted XLA reference executable for the
+        analytical selection's bucket, via the zero-pad reference path.
+        No AOT entry, no staging buffers — nothing the failing rungs
+        shared — and no fault hooks, so chaos plans cannot reach it."""
+        wl = self._wl
+        sel = self.selector.select(m)
+        key = (
+            "__xla_fallback__", sel.bucket, sel.strategy.l1,
+            wl.exec_key(*args) if args else (),
+        )
+        entry = self._exec_cache.get(key)
+        if entry is None:
+            fn = wl.build_executable(
+                sel, impl="xla", interpret=self._interpret
+            )
+            entry = _CacheEntry(fn=jax.jit(fn), compile_seconds=0.0)
+            self._exec_cache[key] = entry
+        entry.hits += 1
+        with self._stats_lock:
+            self.dispatch_stats.calls += 1
+            self.dispatch_stats.fallbacks += 1
+        return self._call_padded(sel, entry, args)
 
     def _call_forwarded(self, args: tuple, handles: set, lazy: bool):
         """Bucket-to-bucket dispatch: LazyBucket operands hand their raw

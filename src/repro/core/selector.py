@@ -272,6 +272,45 @@ class RuntimeSelector:
             select_seconds=time.perf_counter() - t0,
         )
 
+    def select_excluding(
+        self, m_runtime: int, excluded, keyfn
+    ) -> Selection | None:
+        """Cheapest candidate at ``m_runtime`` whose ``keyfn(Selection)``
+        is NOT in ``excluded`` — the degradation ladder's re-selection
+        (core/engine.py).  Walks candidates in scaled-cost order off the
+        hot path (one fused cost evaluation, Selections built only until
+        the first healthy candidate); returns ``None`` when every
+        candidate is quarantined, which sends the ladder to the XLA
+        reference rung."""
+        t0 = time.perf_counter()
+        st = self._stacked
+        costs = runtime_costs(
+            self._hw, self._wl, st.l1_tiles, st.l1_costs,
+            m_runtime, self._num_cores, self._cost_scale,
+        )
+        M, N, K = self._wl.runtime_dims(m_runtime)
+        for idx in np.argsort(costs, kind="stable"):
+            idx = int(idx)
+            strategy = st.strategy_for(idx)
+            m1, n1, k1 = strategy.l1
+            grid = (
+                math.ceil(M / m1),
+                math.ceil(N / n1),
+                math.ceil(K / k1),
+            )
+            sel = Selection(
+                strategy=strategy,
+                backend=st.backend_of(idx),
+                grid=grid,
+                padded_m=grid[0] * m1,
+                bucket=self._wl.bucket_dims(grid, strategy.l1),
+                predicted_cost=float(costs[idx]),
+                select_seconds=time.perf_counter() - t0,
+            )
+            if keyfn(sel) not in excluded:
+                return sel
+        return None
+
     # -- calibration surface (core/calibrate.py) -----------------------------
 
     def candidate_selection(self, idx: int, m_runtime: int) -> Selection:

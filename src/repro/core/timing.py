@@ -122,6 +122,7 @@ def retry_best(
     attempts: int = 4,
     accept: Callable[[object], bool],
     key: Callable[[object], float],
+    stats: dict | None = None,
 ):
     """Re-run ``measure`` until ``accept`` holds or ``attempts`` exhaust,
     keeping the attempt with the smallest ``key``.
@@ -130,12 +131,21 @@ def retry_best(
     (accept = ratio under the gate, key = the ratio): throttling can only
     inflate a window, so min-across-attempts estimates the true value
     while a genuine regression fails every attempt.
+
+    When ``stats`` is given, it records the gate's retry telemetry for
+    committed bench JSON: ``attempts`` (measurements actually run) and
+    ``accepted`` (whether the kept attempt satisfied ``accept``).
     """
     best = measure()
+    used = 1
     for _ in range(max(attempts, 1) - 1):
         if accept(best):
             break
         cur = measure()
+        used += 1
         if key(cur) < key(best):
             best = cur
+    if stats is not None:
+        stats["attempts"] = used
+        stats["accepted"] = bool(accept(best))
     return best

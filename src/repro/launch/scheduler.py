@@ -32,6 +32,16 @@ the bench): one AOT launch per batched decode step, zero padded calls,
 and per-request outputs token-identical to serial ``generate()`` on the
 same server.
 
+Failure domains (DESIGN.md §11): a fault while admitting, growing, or
+decoding resolves to a typed per-request error — ``drain()`` returns
+tokens *or* a :class:`~repro.launch.serve.RequestError` per request id —
+and never tears down the step loop; every failure path settles its pool
+leases.  ``submit()`` adds backpressure: a bounded queue (``max_queue`` →
+:class:`~repro.launch.serve.QueueFullError`) and per-request wall-clock
+deadlines (``Request.deadline_s`` →
+:class:`~repro.launch.serve.DeadlineExceeded`, the slots reused next
+step).
+
 Supported architectures are the uniformly-attention decoders (every
 mixer ``attn``, no cross-attention / vision prefix / encoder stack): the
 shared cache then holds only k/v leaves, whose every read goes through
@@ -42,13 +52,22 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.serve import Request, VortexServer
+from repro.launch.serve import (
+    CacheOverflowError,
+    DeadlineExceeded,
+    QueueFullError,
+    Request,
+    RequestError,
+    VortexServer,
+)
 from repro.models.model import abstract_cache
+from repro.runtime import faults
 from repro.vortex import pow2_bucket
 
 __all__ = ["ContinuousScheduler", "batched_decode_supported"]
@@ -84,12 +103,25 @@ class ContinuousScheduler:
 
     ``submit()`` is thread-safe and returns the assigned request id;
     ``step()``/``drain()`` must run on one scheduler thread.  ``drain()``
-    returns ``{request_id: (b, max_new) int64 array}`` for every request
-    completed since the previous drain.  ``close()`` releases the shared
-    cache leases back to the pool (``leases_active`` returns to 0).
+    returns ``{request_id: (b, max_new) int64 array | RequestError}`` for
+    every request resolved since the previous drain — tokens on success,
+    the typed error when the request's admission/growth/decode failed or
+    its deadline expired.  ``close()`` releases the shared cache leases
+    back to the pool (``leases_active`` returns to 0).
+
+    ``max_queue`` bounds the admission queue (``submit`` raises
+    :class:`QueueFullError` at capacity); None = unbounded.
     """
 
-    def __init__(self, server: VortexServer, *, batch_rows: int = 8):
+    def __init__(
+        self,
+        server: VortexServer,
+        *,
+        batch_rows: int = 8,
+        max_queue: int | None = None,
+    ):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         if not batched_decode_supported(server.cfg):
             raise ValueError(
                 "continuous batching needs a uniformly-attention decoder "
@@ -99,18 +131,22 @@ class ContinuousScheduler:
             )
         self.server = server
         self.batch_rows = pow2_bucket(batch_rows)
+        self.max_queue = max_queue
         self._lock = threading.Lock()
         self._queue: list[Request] = []
         self._next_id = 0
-        self._results: dict[int, np.ndarray] = {}
+        self._results: dict[int, np.ndarray | RequestError] = {}
         # Per-request assembly: (buffer, rows_outstanding).
         self._partial: dict[int, tuple[np.ndarray, int]] = {}
+        # rid -> (absolute monotonic deadline, the request's deadline_s).
+        self._deadlines: dict[int, tuple[float, float]] = {}
         self.rows: list[_Row | None] = [None] * self.batch_rows
         self.cache: dict | None = None
         self.kvb = 0
         self.stats = {
             "steps": 0, "launches": 0, "padded_calls": 0,
             "admitted": 0, "retired": 0, "calibration_slices": 0,
+            "request_errors": 0, "deadline_expired": 0,
         }
         # Per-step active-row positions (and the bucket they ran at), the
         # evidence the staggering tests read: one entry per launch.
@@ -129,17 +165,31 @@ class ContinuousScheduler:
                 f"{self.batch_rows}; split the request or raise batch_rows"
             )
         if s + req.max_new - 1 > self.server.max_cache:
-            raise ValueError(
+            # Same typed error as the serial ``generate()`` pre-prefill
+            # check (launch/serve.py) — one overflow contract, two paths.
+            raise CacheOverflowError(
                 f"admission refused: prompt_len {s} + max_new "
                 f"{req.max_new} needs {s + req.max_new - 1} cache rows > "
                 f"max_cache {self.server.max_cache}; raise max_cache or "
                 "shorten the request"
             )
         with self._lock:
+            if (
+                self.max_queue is not None
+                and len(self._queue) >= self.max_queue
+            ):
+                raise QueueFullError(
+                    f"admission queue is full ({self.max_queue} queued "
+                    "requests); drain or retry after capacity frees up"
+                )
             rid = self._next_id
             self._next_id += 1
             req = dataclasses.replace(req, request_id=rid)
             self._queue.append(req)
+            if req.deadline_s is not None:
+                self._deadlines[rid] = (
+                    time.monotonic() + req.deadline_s, req.deadline_s
+                )
         return rid
 
     # -- shared kv cache ----------------------------------------------------
@@ -152,10 +202,24 @@ class ContinuousScheduler:
             return
         spec = abstract_cache(self.server.cfg, self.batch_rows, kvb)
         pool = self.server.kv_pool
-        self.cache = {
-            key: {n: pool.lease(l.shape, l.dtype) for n, l in entry.items()}
-            for key, entry in spec.items()
-        }
+        cache: dict = {}
+        leased: list[jax.Array] = []
+        # Lease incrementally and settle on failure: a fault partway
+        # through (pool_lease injection, OOM) must not strand the leaves
+        # already checked out — leases_active stays exact.
+        try:
+            for key, entry in spec.items():
+                got = {}
+                for n, leaf in entry.items():
+                    buf = pool.lease(leaf.shape, leaf.dtype)
+                    leased.append(buf)
+                    got[n] = buf
+                cache[key] = got
+        except BaseException:
+            for buf in leased:
+                pool.release(buf)
+            raise
+        self.cache = cache
         self.kvb = kvb
 
     def _grow(self, new_kvb: int) -> None:
@@ -191,11 +255,59 @@ class ContinuousScheduler:
     def _free_slots(self) -> list[int]:
         return [i for i, row in enumerate(self.rows) if row is None]
 
+    def _fail_request(
+        self, rid: int, stage: str, exc: BaseException
+    ) -> None:
+        """Resolve EVERY row of one request to a typed error: seated rows
+        are cleared (their slots reused next step), the partial output
+        buffer dropped, and ``drain()`` returns the
+        :class:`~repro.launch.serve.RequestError` instead of tokens.  The
+        shared cache is untouched — other requests keep decoding."""
+        for slot, row in enumerate(self.rows):
+            if row is not None and row.rid == rid:
+                self.rows[slot] = None
+        self._partial.pop(rid, None)
+        self._deadlines.pop(rid, None)
+        err = exc if isinstance(exc, RequestError) else RequestError(
+            rid, stage, f"{type(exc).__name__}: {exc}"
+        )
+        with self._lock:
+            self._results[rid] = err
+        if isinstance(err, DeadlineExceeded):
+            self.stats["deadline_expired"] += 1
+        else:
+            self.stats["request_errors"] += 1
+
+    def _expire_deadlines(self) -> bool:
+        """Retire queued and active requests whose wall-clock deadline
+        passed; True if anything expired (the tick did work)."""
+        if not self._deadlines:
+            return False
+        now = time.monotonic()
+        expired: list[tuple[int, float]] = []
+        with self._lock:
+            for req in list(self._queue):
+                dl = self._deadlines.get(req.request_id)
+                if dl is not None and now > dl[0]:
+                    self._queue.remove(req)
+                    expired.append((req.request_id, dl[1]))
+        for rid in {row.rid for row in self.rows if row is not None}:
+            dl = self._deadlines.get(rid)
+            if dl is not None and now > dl[0]:
+                expired.append((rid, dl[1]))
+        for rid, deadline_s in expired:
+            self._fail_request(
+                rid, "deadline", DeadlineExceeded(rid, deadline_s)
+            )
+        return bool(expired)
+
     def _admit(self, req: Request) -> None:
         """Prefill ONE queued request through the server's serial prefill
         executables and seat its rows: per-row first token from the
         prefill argmax, cache rows copied into free slots, the transient
         per-request buffers released back to the pool."""
+        if faults.ACTIVE is not None:
+            faults.ACTIVE.check("scheduler_step")
         srv = self.server
         b, s = req.tokens.shape
         bp = srv.batch_bucket(b)
@@ -245,21 +357,31 @@ class ContinuousScheduler:
             self._partial[row.rid] = (buf, outstanding)
         else:
             del self._partial[row.rid]
+            self._deadlines.pop(row.rid, None)
             with self._lock:
                 self._results[row.rid] = buf
         self.rows[slot] = None
         self.stats["retired"] += 1
 
     def step(self) -> bool:
-        """One scheduler tick: retire finished rows, admit every queued
-        request that fits, then advance all active rows with EXACTLY ONE
-        mixed-progress decode launch.  Returns False when fully idle."""
+        """One scheduler tick: retire finished rows, expire deadlines,
+        admit every queued request that fits, then advance all active rows
+        with EXACTLY ONE mixed-progress decode launch.  Returns False when
+        fully idle.
+
+        Failure isolation: an exception while admitting resolves THAT
+        request to a ``RequestError``; one while growing fails only the
+        rows that needed the larger bucket; one in the decode launch fails
+        the rows that shared it.  Nothing propagates out of ``step()`` —
+        the loop, the shared cache, and the lease ledger stay serviceable.
+        """
         srv = self.server
         worked = False
         for slot, row in enumerate(self.rows):
             if row is not None and row.remaining == 0:
                 self._retire(slot)
                 worked = True
+        worked |= self._expire_deadlines()
         while True:
             with self._lock:
                 req = (
@@ -271,7 +393,11 @@ class ContinuousScheduler:
                 )
             if req is None:
                 break
-            self._admit(req)
+            try:
+                self._admit(req)
+            except Exception as exc:
+                assert req.request_id is not None
+                self._fail_request(req.request_id, "admit", exc)
             worked = True
             # A stop token in the prefill argmax retires without a step.
             for slot, row in enumerate(self.rows):
@@ -294,7 +420,19 @@ class ContinuousScheduler:
 
         needed = max(row.pos_next + 1 for _, row in active)
         if needed > self.kvb and self.kvb < srv.max_cache:
-            self._grow(srv._grown_kv_bucket(self.kvb, needed))
+            try:
+                self._grow(srv._grown_kv_bucket(self.kvb, needed))
+            except Exception as exc:
+                # Two-phase growth left the shared cache (and every lease)
+                # untouched — fail exactly the rows that no longer fit the
+                # current bucket; everything else decodes next tick.
+                stuck = {
+                    row.rid for _, row in active
+                    if row.pos_next + 1 > self.kvb
+                }
+                for rid in stuck:
+                    self._fail_request(rid, "grow", exc)
+                return True
 
         # Free slots decode at pos 0: their k/v row 0 is freshly written
         # by this very launch (finite), and kv_len = 1 reads only it.
@@ -303,10 +441,20 @@ class ContinuousScheduler:
         for slot, row in active:
             tok[slot, 0] = row.last_tok
             pos[slot] = row.pos_next
-        exe = srv._decode_exec_vec_for(self.batch_rows, self.kvb)
-        logits, self.cache = exe(
-            srv.params, self.cache, jnp.asarray(tok), jnp.asarray(pos)
-        )
+        try:
+            if faults.ACTIVE is not None:
+                faults.ACTIVE.check("scheduler_step")
+            exe = srv._decode_exec_vec_for(self.batch_rows, self.kvb)
+            logits, self.cache = exe(
+                srv.params, self.cache, jnp.asarray(tok), jnp.asarray(pos)
+            )
+        except Exception as exc:
+            # The launch raised before the cache assignment: the shared
+            # leaves are exactly the pre-step state.  Every row that
+            # shared this launch resolves to a typed error.
+            for rid in {row.rid for _, row in active}:
+                self._fail_request(rid, "decode", exc)
+            return True
         self.stats["steps"] += 1
         self.stats["launches"] += 1  # the ONE launch this step performed
         self.step_positions.append({
@@ -344,9 +492,13 @@ class ContinuousScheduler:
         except Exception:
             pass
 
-    def drain(self) -> dict[int, np.ndarray]:
+    def drain(self) -> dict[int, np.ndarray | RequestError]:
         """Run steps until queue and slots are empty; return (and clear)
-        the results completed since the last drain."""
+        the results resolved since the last drain — a ``(b, max_new)``
+        token array per completed request, or the
+        :class:`~repro.launch.serve.RequestError` that resolved it.
+        Failed requests free their slots immediately, so drain always
+        terminates even when every step faults."""
         while True:
             worked = self.step()
             with self._lock:

@@ -73,10 +73,60 @@ from repro.models.model import abstract_cache
 from repro.models.params import init_params
 from repro.models.partitioning import make_rules
 from repro.models.registry import get_config, get_smoke_config
+from repro.runtime import faults
 from repro.train.step import make_decode_step, make_prefill_step
 from repro.vortex import CompiledOp, Engine, EngineConfig, pow2_bucket
 
-__all__ = ["VortexServer", "Request", "KVBucketPool"]
+__all__ = [
+    "VortexServer",
+    "Request",
+    "KVBucketPool",
+    "RequestError",
+    "QueueFullError",
+    "DeadlineExceeded",
+    "CacheOverflowError",
+]
+
+
+class CacheOverflowError(ValueError):
+    """The request cannot fit ``max_cache`` even after growth — refused
+    up front (before any prefill work) by BOTH admission paths: the
+    serial ``generate()`` and the scheduler's ``submit()``.  A
+    ``ValueError`` subclass so pre-existing callers matching ValueError
+    keep working."""
+
+
+class QueueFullError(RuntimeError):
+    """``submit()`` refused: the scheduler's bounded admission queue
+    (``max_queue``) is at capacity — back-pressure, not failure; retry
+    after a drain."""
+
+
+class RequestError(RuntimeError):
+    """A typed per-request failure (DESIGN.md §11): the scheduler's
+    ``drain()`` RETURNS this (in place of the token array) for a request
+    whose admission, cache growth, or decode raised — the step loop
+    itself never tears down.  ``stage`` names the failure domain
+    (``admit`` / ``grow`` / ``decode`` / ``deadline``)."""
+
+    def __init__(self, request_id: int, stage: str, message: str):
+        self.request_id = request_id
+        self.stage = stage
+        super().__init__(
+            f"request {request_id} failed during {stage}: {message}"
+        )
+
+
+class DeadlineExceeded(RequestError):
+    """A request's wall-clock ``deadline_s`` expired before completion;
+    its rows retire immediately and the slots are reused next step."""
+
+    def __init__(self, request_id: int, deadline_s: float):
+        self.deadline_s = deadline_s
+        super().__init__(
+            request_id, "deadline",
+            f"deadline_s={deadline_s} expired before completion",
+        )
 
 
 @dataclasses.dataclass
@@ -91,6 +141,10 @@ class Request:
     # can be matched to submissions; the serial ``generate()`` path never
     # reads it.
     request_id: int | None = None
+    # Wall-clock budget from ``submit()`` (scheduler path only): once it
+    # expires the request resolves to ``DeadlineExceeded`` instead of
+    # occupying slots forever.  None = no deadline.
+    deadline_s: float | None = None
 
 
 class KVBucketPool:
@@ -134,6 +188,8 @@ class KVBucketPool:
         """One bucket-shaped buffer: a parked one when available (stale
         contents — callers must read it through a kv_len mask), else a
         fresh zero-filled allocation.  ``zero=True`` always allocates."""
+        if faults.ACTIVE is not None:
+            faults.ACTIVE.check("pool_lease")
         key = (tuple(shape), jnp.dtype(dtype).name)
         buf = None
         with self._lock:
@@ -460,35 +516,53 @@ class VortexServer:
         bucket transitions — never per token.  Buffers are LEASED from the
         kv pool (attention k/v reuse parked buffers as-is — their stale
         tails sit past kv_len and are never read; MLA's ckv/k_rope lease
-        fresh zeros, see ``_POOLED_STALE_OK``) and the outgrown leaf is
-        released back, so chained growth recycles instead of churning."""
+        fresh zeros, see ``_POOLED_STALE_OK``) and the outgrown leaves are
+        released back, so chained growth recycles instead of churning.
+
+        Growth is TWO-PHASE for failure isolation: every new leaf is
+        leased and copied first, and the outgrown leaves are released only
+        once the whole cache grew.  A mid-grow failure (lease fault, OOM)
+        releases the partial new set and re-raises with ``cache``
+        untouched — the caller's settling ``finally`` then releases every
+        ORIGINAL lease exactly once, never double-releasing a leaf this
+        method already returned.
+        """
         st = self.decode_stats
         pool = self.kv_pool
-
-        def grow_entry(entry: dict) -> dict:
-            out = {}
-            for name, leaf in entry.items():
-                ax = self._CACHE_SEQ_AXIS.get(name)
-                if ax is None or leaf.shape[ax] >= new_len:
-                    out[name] = leaf
+        new_leases: list[tuple[jax.Array, bool]] = []
+        old_leaves: list[tuple[jax.Array, bool]] = []
+        out_cache: dict = {}
+        try:
+            for key, entry in cache.items():
+                if key == "encoder_out":
+                    out_cache[key] = entry
                     continue
-                shape = list(leaf.shape)
-                shape[ax] = new_len
-                stale_ok = name in self._POOLED_STALE_OK
-                buf = pool.lease(
-                    tuple(shape), leaf.dtype, zero=not stale_ok
-                )
-                out[name] = jax.lax.dynamic_update_slice(
-                    buf, leaf, (0,) * leaf.ndim
-                )
-                pool.release(leaf, reuse=stale_ok)
-                st.stage_copies += 1
-            return out
-
-        return {
-            key: entry if key == "encoder_out" else grow_entry(entry)
-            for key, entry in cache.items()
-        }
+                out = {}
+                for name, leaf in entry.items():
+                    ax = self._CACHE_SEQ_AXIS.get(name)
+                    if ax is None or leaf.shape[ax] >= new_len:
+                        out[name] = leaf
+                        continue
+                    shape = list(leaf.shape)
+                    shape[ax] = new_len
+                    stale_ok = name in self._POOLED_STALE_OK
+                    buf = pool.lease(
+                        tuple(shape), leaf.dtype, zero=not stale_ok
+                    )
+                    new_leases.append((buf, stale_ok))
+                    out[name] = jax.lax.dynamic_update_slice(
+                        buf, leaf, (0,) * leaf.ndim
+                    )
+                    old_leaves.append((leaf, stale_ok))
+                out_cache[key] = out
+        except BaseException:
+            for buf, stale_ok in new_leases:
+                pool.release(buf, reuse=stale_ok)
+            raise
+        for leaf, stale_ok in old_leaves:
+            pool.release(leaf, reuse=stale_ok)
+        st.stage_copies += len(old_leaves)
+        return out_cache
 
     # -- lazy-handle chained prefill ----------------------------------------
 
@@ -741,6 +815,7 @@ class VortexServer:
             "calls", "launches", "aligned_calls", "unaligned_calls",
             "stage_copies", "unstage_copies", "padded_calls",
             "traced_calls", "forwarded", "realize_slices",
+            "fallbacks", "quarantined",
         )
         estats = self.engine.stats()
         out = {
@@ -764,12 +839,12 @@ class VortexServer:
     def generate(self, req: Request) -> np.ndarray:
         b, s = req.tokens.shape
         if s + req.max_new - 1 > self.max_cache:
-            # Refuse loudly: past the cap the cache cannot grow, the
-            # in-program dynamic_update_slice would clamp its start and
-            # silently stomp the last KV row — corrupted logits with no
-            # signal.  (The pre-bucketed server had the same overflow and
-            # hid it; the bucket contract makes it checkable.)
-            raise ValueError(
+            # Refuse loudly BEFORE any prefill work: past the cap the
+            # cache cannot grow, the in-program dynamic_update_slice would
+            # clamp its start and silently stomp the last KV row —
+            # corrupted logits with no signal.  Same typed error as the
+            # scheduler's admission-time rejection (launch/scheduler.py).
+            raise CacheOverflowError(
                 f"prompt_len {s} + max_new {req.max_new} needs "
                 f"{s + req.max_new - 1} cache rows > max_cache "
                 f"{self.max_cache}; raise max_cache or shorten the request"

@@ -1,11 +1,32 @@
-from repro.runtime.heartbeat import StepMonitor
-from repro.runtime.elastic import plan_remesh, RemeshPlan
-from repro.runtime.supervisor import Supervisor, SimulatedFailure
+"""Runtime services: heartbeat, elastic remesh, supervisor, fault plans.
 
-__all__ = [
-    "StepMonitor",
-    "plan_remesh",
-    "RemeshPlan",
-    "Supervisor",
-    "SimulatedFailure",
-]
+Exports resolve lazily (PEP 562) so that hot-path modules importing the
+fault-injection hooks (``from repro.runtime import faults``) never pay for
+— or cycle through — the supervisor/checkpoint stack.
+"""
+import importlib
+
+_EXPORTS = {
+    "StepMonitor": "repro.runtime.heartbeat",
+    "plan_remesh": "repro.runtime.elastic",
+    "RemeshPlan": "repro.runtime.elastic",
+    "Supervisor": "repro.runtime.supervisor",
+    "SimulatedFailure": "repro.runtime.supervisor",
+    "FaultPlan": "repro.runtime.faults",
+    "InjectedFault": "repro.runtime.faults",
+}
+
+__all__ = ["faults", *_EXPORTS]
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -58,6 +58,14 @@ class EngineConfig:
     * ``calibration_cache_dir`` — where calibrated tables persist, keyed
       by hardware fingerprint (None = ``$VORTEX_CACHE_DIR`` or
       ``~/.cache/vortex``; never inside the repo).
+    * ``max_kernel_retries`` — degradation-ladder depth (DESIGN.md §11):
+      how many next-best lattice candidates a dispatch re-selects after
+      the chosen candidate fails at precompile/launch, before falling
+      back to the XLA reference rung.  0 = straight to the reference.
+    * ``denylist_persist`` — persist quarantined candidates next to the
+      calibration cache (``<fingerprint>.deny.json``) so restarts skip
+      known-bad candidates without re-failing them; False keeps the
+      quarantine in-memory only (tests, hermetic runs).
     """
 
     hardware: str = "host_cpu"
@@ -75,8 +83,15 @@ class EngineConfig:
     calibration_top_k: int = 3
     calibration_budget_s: float = 0.25
     calibration_cache_dir: str | None = None
+    max_kernel_retries: int = 2
+    denylist_persist: bool = True
 
     def __post_init__(self) -> None:
+        if self.max_kernel_retries < 0:
+            raise ValueError(
+                f"max_kernel_retries must be >= 0, "
+                f"got {self.max_kernel_retries}"
+            )
         if self.backends is not None:
             object.__setattr__(self, "backends", tuple(self.backends))
         if self.empirical_levels is not None:

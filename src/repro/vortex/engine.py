@@ -102,6 +102,10 @@ class Engine:
         # Background calibrator (core/calibrate.py), created on first use
         # when config.calibration != "off".  Guarded by _build_lock.
         self._calibrator = None
+        # Persistent candidate denylist shared by every kernel of this
+        # engine (degradation ladder, DESIGN.md §11).  Created lazily under
+        # _build_lock; None when persistence is disabled.
+        self._denylist = None
 
     @property
     def calibrator(self):
@@ -172,6 +176,8 @@ class Engine:
                         table_extend_limit=cfg.table_extend_limit,
                         staging=cfg.staging,
                         staging_pool_cap=cfg.staging_pool_cap,
+                        max_retries=cfg.max_kernel_retries,
+                        denylist=self._denylist_store(),
                     )
                     self._kernels[key] = kern
         if built and self.config.calibration == "eager-warmup":
@@ -183,6 +189,26 @@ class Engine:
             if cal.pending():
                 cal.run()
         return kern
+
+    def _denylist_store(self):
+        """The engine's persistent quarantine store (or None when
+        ``config.denylist_persist`` is off).  Constructed HERE rather than
+        inside core/engine.py so core.engine never imports core.denylist
+        (which imports core.calibrate, which imports core.engine)."""
+        cfg = self.config
+        if not cfg.denylist_persist:
+            return None
+        if self._denylist is None:
+            from repro.core.denylist import DenylistStore
+
+            self._denylist = DenylistStore(
+                self._hw,
+                cfg.backends or tuple(self._hw.backends),
+                cfg.impl,
+                cfg.interpret,
+                cache_dir=cfg.calibration_cache_dir,
+            )
+        return self._denylist
 
     def compile(
         self, workload: Workload | str, **params: Any
@@ -291,6 +317,7 @@ class Engine:
                     "stage_copies": 0, "unstage_copies": 0,
                     "padded_calls": 0, "traced_calls": 0,
                     "forwarded": 0, "realize_slices": 0,
+                    "fallbacks": 0, "quarantined": 0,
                 },
             )
             sstats = kernel.selector.stats

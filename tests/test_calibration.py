@@ -417,6 +417,86 @@ def test_lattice_checksum_tracks_candidate_space():
 
 
 # ---------------------------------------------------------------------------
+# Persistence under injected I/O faults (DESIGN.md §11): every failure is
+# silent-but-counted, serving never crashes, tables stay usable in memory.
+# ---------------------------------------------------------------------------
+
+
+def test_save_fault_at_open_counted_never_raises(cache_dir):
+    from repro.runtime import faults
+
+    eng = gemm_engine(calibration="on-idle")
+    cal = eng.calibrator
+    cal.policy = dataclasses.replace(cal.policy, **SMALL)
+    # cache_io occurrence 1 = save() entry: the write never starts.
+    with faults.installed(faults.FaultPlan({"cache_io": [1]})):
+        cal.run()
+    assert cal.counters["save_errors"] == 1
+    assert cal.counters["store_rejects"] == 1
+    assert not os.path.exists(cal.cache_path())
+    # The calibration itself still applied in memory — only persistence
+    # was lost; the next clean save round-trips.
+    assert cal.stats()["applied"] == 1
+    cal.save()
+    assert os.path.exists(cal.cache_path())
+
+
+def test_save_fault_before_replace_leaves_no_partial_file(cache_dir):
+    from repro.runtime import faults
+
+    eng = gemm_engine(calibration="on-idle")
+    cal = eng.calibrator
+    cal.policy = dataclasses.replace(cal.policy, **SMALL)
+    # cache_io occurrence 2 = just before os.replace: the tmp file was
+    # fully written but never published — a reader can NEVER observe a
+    # partial table at the real path.
+    with faults.installed(faults.FaultPlan({"cache_io": [2]})):
+        cal.run()
+    assert cal.counters["store_rejects"] == 1
+    path = cal.cache_path()
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".tmp")  # the orphaned atomic-write tmp
+    # A fresh engine sees no table (missing file is not an error) and
+    # keeps serving analytically.
+    eng2 = gemm_engine(calibration="on-idle")
+    cal2 = eng2.calibrator
+    assert cal2.load() == 0
+    assert cal2.counters["load_rejects"] == 0
+
+
+def test_load_fault_counted_as_reject(cache_dir):
+    from repro.runtime import faults
+
+    eng = gemm_engine(calibration="on-idle")
+    calibrated(eng)  # clean save
+
+    eng2 = gemm_engine(calibration="on-idle")
+    cal2 = eng2.calibrator
+    cal2.policy = dataclasses.replace(cal2.policy, **SMALL)
+    with faults.installed(faults.FaultPlan({"cache_io": [1]})):
+        assert cal2.load() == 0
+    assert cal2.counters["load_rejects"] == 1
+    # The file is intact: a clean retry loads with zero re-measurements.
+    assert cal2.load() == 1
+    assert cal2.counters["measurements"] == 0
+
+
+def test_measure_fault_skips_kernel_not_calibrator(cache_dir):
+    from repro.runtime import faults
+
+    eng = gemm_engine(calibration="on-idle")
+    cal = eng.calibrator
+    cal.policy = dataclasses.replace(cal.policy, **SMALL)
+    with faults.installed(faults.FaultPlan({"calib_measure": [1]})):
+        cal.run()
+    s = cal.stats()
+    assert s["applied"] == 0 and s["skipped"] == 1
+    assert cal.counters["measurements"] == 0
+    # Dispatch is untouched — analytical serving continues.
+    eng.dispatch("gemm", _arr((45, 64)), _arr((64, 64)))
+
+
+# ---------------------------------------------------------------------------
 # Calibrator behaviour on live engines
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,252 @@
+"""Deterministic fault injection + the kernel degradation ladder
+(DESIGN.md §11).
+
+Acceptance surface:
+
+  * FaultPlan semantics: exact 1-based occurrences, per-site counters,
+    the ``fired`` audit trail, seeded-random determinism, scoped
+    install/restore;
+  * the ladder: a failed candidate is quarantined and the next-best
+    lattice candidate retried (correct output, no exception), the XLA
+    reference rung absorbs a fully-hammered lattice, and when even the
+    reference fails the in-memory quarantines roll back and the original
+    error propagates (user errors never poison the denylist);
+  * persistence: quarantines survive an engine restart through the
+    fingerprint-keyed denylist file — a known-bad candidate is never
+    re-attempted (zero quarantine events on the fresh engine);
+  * zero overhead: with no plan installed the hot path is bit-identical
+    and the ladder counters stay 0.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.runtime import faults
+from repro.vortex import Engine
+
+RNG = np.random.default_rng(11)
+
+
+def _arr(shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+@pytest.fixture()
+def cache_dir(tmp_path, monkeypatch):
+    d = str(tmp_path / "vortex-cache")
+    monkeypatch.setenv("VORTEX_CACHE_DIR", d)
+    return d
+
+
+def _engine(**over):
+    over.setdefault("denylist_persist", False)
+    return Engine("host_cpu", empirical_levels=(), **over)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+
+
+def test_plan_fires_exact_occurrences():
+    plan = faults.FaultPlan({"pool_lease": [2, 4]})
+    fired = []
+    for i in range(1, 6):
+        try:
+            plan.check("pool_lease")
+        except faults.InjectedFault as exc:
+            assert exc.site == "pool_lease" and exc.occurrence == i
+            fired.append(i)
+    assert fired == [2, 4]
+    assert plan.fired == [("pool_lease", 2), ("pool_lease", 4)]
+    assert plan.counts == {"pool_lease": 5}
+
+
+def test_plan_counters_are_per_site():
+    plan = faults.FaultPlan({"aot_launch": [1]})
+    plan.check("precompile")  # other sites never trip this spec
+    plan.check("scheduler_step")
+    with pytest.raises(faults.InjectedFault):
+        plan.check("aot_launch")
+    assert plan.counts == {
+        "precompile": 1, "scheduler_step": 1, "aot_launch": 1
+    }
+
+
+def test_plan_validates_sites_and_indices():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        faults.FaultPlan({"warp_drive": [1]})
+    with pytest.raises(ValueError, match="1-based"):
+        faults.FaultPlan({"pool_lease": [0]})
+
+
+def test_random_plan_deterministic_and_never_empty():
+    a = faults.FaultPlan.random(123)
+    b = faults.FaultPlan.random(123)
+    assert a.spec == b.spec
+    assert a.spec != faults.FaultPlan.random(124).spec
+    # rate=0 would draw nothing: occurrence 1 of the first site is forced.
+    c = faults.FaultPlan.random(0, sites=("cache_io",), rate=0.0)
+    assert c.spec == {"cache_io": frozenset([1])}
+
+
+def test_installed_scopes_and_restores():
+    assert faults.ACTIVE is None
+    outer = faults.FaultPlan({"pool_lease": [1]})
+    inner = faults.FaultPlan({"cache_io": [1]})
+    with faults.installed(outer):
+        assert faults.ACTIVE is outer
+        with faults.installed(inner):
+            assert faults.ACTIVE is inner
+        assert faults.ACTIVE is outer
+    assert faults.ACTIVE is None
+    # ...even when the body raises.
+    with pytest.raises(RuntimeError):
+        with faults.installed(outer):
+            raise RuntimeError("boom")
+    assert faults.ACTIVE is None
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_launch_fault_retries_next_best_candidate():
+    eng = _engine()
+    x, w = _arr((33, 64)), _arr((64, 64))
+    ref = np.asarray(eng.dispatch("gemm", x, w))  # warm, no plan
+
+    with faults.installed(faults.FaultPlan({"aot_launch": [1]})):
+        got = np.asarray(eng.dispatch("gemm", x, w))
+    np.testing.assert_allclose(got, ref, rtol=2e-4)
+    st = eng.stats()["gemm"]
+    assert st["quarantined"] == 1
+    assert st["fallbacks"] == 0  # the lattice retry sufficed
+
+
+def test_hammered_lattice_falls_back_to_reference():
+    eng = _engine()
+    x, w = _arr((45, 64)), _arr((64, 64))
+    ref = np.asarray(x) @ np.asarray(w)
+
+    hammer = faults.FaultPlan({
+        "aot_launch": range(1, 200), "precompile": range(1, 200),
+    })
+    with faults.installed(hammer):
+        got = np.asarray(eng.dispatch("gemm", x, w))
+    np.testing.assert_allclose(got, ref, rtol=2e-4)
+    st = eng.stats()["gemm"]
+    assert st["fallbacks"] == 1
+    # Primary + max_kernel_retries re-selections all quarantined.
+    assert st["quarantined"] == 1 + eng.config.max_kernel_retries
+
+
+def test_reference_failure_rolls_back_quarantines():
+    """When even the XLA reference rung fails, the inputs (not the
+    candidates) are at fault: the original error propagates and nothing
+    stays quarantined — a user error never poisons the lattice."""
+    eng = _engine()
+    x, w = _arr((51, 64)), _arr((64, 64))
+    eng.dispatch("gemm", x, w)  # warm
+    kern = next(iter(eng._kernels.values()))
+
+    orig = kern._fallback_dispatch
+
+    def broken_fallback(m, args):
+        raise RuntimeError("reference rung down too")
+
+    kern._fallback_dispatch = broken_fallback
+    try:
+        with faults.installed(faults.FaultPlan({
+            "aot_launch": range(1, 200), "precompile": range(1, 200),
+        })):
+            with pytest.raises(RuntimeError, match="reference rung") as ei:
+                eng.dispatch("gemm", x, w)
+        # The candidate failure that started the walk rides along as the
+        # explicit cause (raise ... from).
+        assert isinstance(ei.value.__cause__, faults.InjectedFault)
+    finally:
+        kern._fallback_dispatch = orig
+    st = eng.stats()["gemm"]
+    assert st["quarantined"] == 0  # rolled back
+    assert not kern._quarantined
+    # The kernel recovers completely once the fault clears.
+    got = np.asarray(eng.dispatch("gemm", x, w))
+    np.testing.assert_allclose(got, np.asarray(x) @ np.asarray(w), rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Denylist persistence across restarts
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_survives_restart_never_reattempted(cache_dir):
+    eng = _engine(denylist_persist=True)
+    x, w = _arr((39, 64)), _arr((64, 64))
+    ref = np.asarray(x) @ np.asarray(w)
+    with faults.installed(faults.FaultPlan({
+        "aot_launch": range(1, 200), "precompile": range(1, 200),
+    })):
+        eng.dispatch("gemm", x, w)
+    kern = next(iter(eng._kernels.values()))
+    quarantined = set(kern._quarantined)
+    assert quarantined and eng.stats()["gemm"]["fallbacks"] == 1
+
+    deny = [
+        f for f in os.listdir(cache_dir) if f.endswith(".deny.json")
+    ]
+    assert len(deny) == 1
+    blob = json.load(open(os.path.join(cache_dir, deny[0])))
+    assert blob["version"] == 1
+    assert set(*blob["kernels"].values()) == quarantined
+
+    # Fresh engine, same fingerprint: the quarantine pre-seeds and the
+    # known-bad candidates are NEVER re-attempted — no plan installed,
+    # yet zero quarantine events and zero fallbacks.
+    eng2 = _engine(denylist_persist=True)
+    got = np.asarray(eng2.dispatch("gemm", x, w))
+    np.testing.assert_allclose(got, ref, rtol=2e-4)
+    kern2 = next(iter(eng2._kernels.values()))
+    assert kern2._quarantined == quarantined
+    st2 = eng2.stats()["gemm"]
+    assert st2["quarantined"] == 0 and st2["fallbacks"] == 0
+
+
+def test_denylist_io_fault_is_quiet(cache_dir):
+    """A cache_io fault during denylist persistence never reaches the
+    dispatch path: the quarantine stays effective in memory."""
+    eng = _engine(denylist_persist=True)
+    x, w = _arr((29, 64)), _arr((64, 64))
+    ref = np.asarray(eng.dispatch("gemm", x, w))
+    # Occurrence 1 = the denylist load at kernel build already happened
+    # (before install); fail the store instead.
+    with faults.installed(faults.FaultPlan({
+        "aot_launch": [1], "cache_io": [1, 2],
+    })):
+        got = np.asarray(eng.dispatch("gemm", x, w))
+    np.testing.assert_allclose(got, ref, rtol=2e-4)
+    assert eng.stats()["gemm"]["quarantined"] == 1
+    assert not os.path.exists(cache_dir) or not [
+        f for f in os.listdir(cache_dir) if f.endswith(".deny.json")
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Zero overhead with no plan
+# ---------------------------------------------------------------------------
+
+
+def test_no_plan_is_bit_identical_and_ladder_silent():
+    assert faults.ACTIVE is None
+    eng = _engine()
+    x, w = _arr((77, 64)), _arr((64, 64))
+    a = np.asarray(eng.dispatch("gemm", x, w))
+    b = np.asarray(eng.dispatch("gemm", x, w))
+    assert np.array_equal(a, b)  # bit-identical replay
+    st = eng.stats()["gemm"]
+    assert st["fallbacks"] == 0 and st["quarantined"] == 0

@@ -235,6 +235,127 @@ def test_unsupported_arch_refused():
         ContinuousScheduler(srv, batch_rows=2)
 
 
+def test_admit_fault_isolated_to_one_request(server):
+    """A pool-lease fault while admitting resolves THAT request to a
+    typed error; every other request completes token-identical to
+    serial and the lease ledger settles."""
+    from repro.launch.serve import RequestError
+    from repro.runtime import faults
+
+    rng = np.random.default_rng(6)
+    reqs = _requests(rng, 3, max_new=6)
+    serial = _serial(server, reqs)
+
+    sched = ContinuousScheduler(server, batch_rows=4)
+    plan = faults.FaultPlan({"pool_lease": [1]})
+    with faults.installed(plan):
+        rids = [sched.submit(r) for r in reqs]
+        res = sched.drain()
+    assert plan.fired == [("pool_lease", 1)]
+    assert set(res) == set(rids)
+    err = res[rids[0]]
+    assert isinstance(err, RequestError)
+    assert err.stage == "admit" and err.request_id == rids[0]
+    for rid, ser in zip(rids[1:], serial[1:]):
+        assert np.array_equal(res[rid], ser), rid
+    assert sched.stats["request_errors"] == 1
+    _assert_clean(server, sched)
+
+
+def test_decode_fault_fails_sharers_loop_stays_serviceable(server):
+    """A fault in the mixed-progress decode launch fails exactly the
+    rows that shared it — and the NEXT submission on the same scheduler
+    decodes normally (the step loop and shared cache survive)."""
+    from repro.launch.serve import RequestError
+    from repro.runtime import faults
+
+    rng = np.random.default_rng(7)
+    reqs = _requests(rng, 2, max_new=6)
+    serial = _serial(server, reqs)
+
+    sched = ContinuousScheduler(server, batch_rows=4)
+    # scheduler_step occurrences: admit, admit, then the decode launch.
+    plan = faults.FaultPlan({"scheduler_step": [3]})
+    with faults.installed(plan):
+        rids = [sched.submit(r) for r in reqs]
+        res = sched.drain()
+        assert plan.fired == [("scheduler_step", 3)]
+        for rid in rids:
+            assert isinstance(res[rid], RequestError)
+            assert res[rid].stage == "decode"
+        # Same scheduler, same (exhausted) plan: full recovery.
+        rid2 = sched.submit(reqs[0])
+        res2 = sched.drain()
+    assert np.array_equal(res2[rid2], serial[0])
+    _assert_clean(server, sched)
+
+
+def test_bounded_queue_backpressure(server):
+    """``max_queue`` bounds the admission queue: the overflow submit
+    raises QueueFullError, the queued request still completes."""
+    from repro.launch.serve import QueueFullError
+
+    rng = np.random.default_rng(8)
+    reqs = _requests(rng, 2, max_new=4)
+    serial = _serial(server, reqs)
+
+    sched = ContinuousScheduler(server, batch_rows=4, max_queue=1)
+    rid = sched.submit(reqs[0])
+    with pytest.raises(QueueFullError, match="admission queue is full"):
+        sched.submit(reqs[1])
+    res = sched.drain()
+    assert np.array_equal(res[rid], serial[0])
+    with pytest.raises(ValueError, match="max_queue"):
+        ContinuousScheduler(server, batch_rows=4, max_queue=0)
+    _assert_clean(server, sched)
+
+
+def test_deadline_expires_and_slot_reuse(server):
+    """An already-expired deadline resolves to DeadlineExceeded before
+    any decode work; the freed capacity serves the next request."""
+    from repro.launch.serve import DeadlineExceeded
+    from repro.runtime import faults  # noqa: F401 (site parity import)
+
+    rng = np.random.default_rng(9)
+    reqs = _requests(rng, 2, max_new=4)
+    serial = _serial(server, reqs)
+
+    sched = ContinuousScheduler(server, batch_rows=4)
+    doomed = Request(
+        tokens=reqs[0].tokens, max_new=4, deadline_s=0.0
+    )
+    rid0 = sched.submit(doomed)
+    rid1 = sched.submit(reqs[1])
+    res = sched.drain()
+    err = res[rid0]
+    assert isinstance(err, DeadlineExceeded)
+    assert err.stage == "deadline" and err.request_id == rid0
+    assert np.array_equal(res[rid1], serial[1])
+    assert sched.stats["deadline_expired"] == 1
+    # The expired request's slot capacity is reusable immediately.
+    rid2 = sched.submit(reqs[0])
+    res2 = sched.drain()
+    assert np.array_equal(res2[rid2], serial[0])
+    _assert_clean(server, sched)
+
+
+def test_cache_overflow_one_typed_error_both_paths(server):
+    """``generate()`` and ``submit()`` refuse an impossible request with
+    the SAME typed error (CacheOverflowError, a ValueError subclass) —
+    one overflow contract across the serial and batched paths."""
+    from repro.launch.serve import CacheOverflowError
+
+    big = Request(tokens=np.zeros((1, 200), np.int32), max_new=MAX_CACHE)
+    sched = ContinuousScheduler(server, batch_rows=4)
+    with pytest.raises(CacheOverflowError, match="admission refused"):
+        sched.submit(big)
+    with pytest.raises(CacheOverflowError):
+        server.generate(big)
+    assert issubclass(CacheOverflowError, ValueError)
+    assert sched.drain() == {}
+    _assert_clean(server, sched)
+
+
 @pytest.mark.contention
 def test_threaded_submitters_stress(server):
     """Submitters race the scheduler thread: every request completes and
