@@ -496,6 +496,101 @@ def _bench_prefill_chain(smoke: bool) -> dict:
     }
 
 
+def _bench_moe(smoke: bool) -> dict:
+    """The MoE serving section: a granite_moe-shaped expert-FFN layer
+    served engine-vs-dense.  With a session installed, ``_expert_ffn``
+    collapses its three dense ``(g,E,C,·)`` einsums into three grouped-GEMM
+    dispatches — each is ONE bucketed masked-tail launch covering all E
+    experts, with the per-expert token counts (a routing outcome, not an
+    input length) riding in as the runtime extent vector.
+
+    ``launches_per_moe_layer`` is normalized per projection (three
+    projections — w_in, w_gate, w_out — per layer call): 1.0 means every
+    projection ran as exactly ONE grouped launch for all experts, never E
+    per-expert launches and never a pad fallback.  CI gates
+    ``launches_per_moe_layer == 1 && padded_calls == 0`` plus bit-identity
+    vs the dense-einsum fallback.
+    """
+    import dataclasses
+
+    import repro.vortex as vortex
+    from repro.configs.granite_moe_1b import CONFIG, SMOKE
+    from repro.models import layers as Lyr
+    from repro.models.partitioning import AxisRules
+
+    rules = AxisRules(rules={}, mesh_axes=())
+    if smoke:
+        cfg = SMOKE
+        b, s = 2, 33
+    else:
+        # granite_moe_1b's expert geometry (32 experts, top-8) at a width
+        # a CPU runner can turn around; the launch accounting is what the
+        # gate consumes, not the absolute wall-clock.
+        cfg = dataclasses.replace(
+            CONFIG, d_model=256,
+            moe=dataclasses.replace(CONFIG.moe, d_ff_expert=128),
+        )
+        b, s = 2, 96
+    m = cfg.moe
+    rng = np.random.default_rng(41)
+    mk = lambda *sh: jnp.asarray(rng.normal(size=sh) * 0.05, jnp.float32)
+    p = {
+        "router": mk(cfg.d_model, m.num_experts),
+        "w_in": mk(m.num_experts, cfg.d_model, m.d_ff_expert),
+        "w_gate": mk(m.num_experts, cfg.d_model, m.d_ff_expert),
+        "w_out": mk(m.num_experts, m.d_ff_expert, cfg.d_model),
+    }
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+
+    layer_call = lambda: Lyr.moe_forward(p, x, cfg, rules)[0]
+    y_dense = jax.block_until_ready(layer_call())
+    rounds = dict(
+        inner=1, min_rounds=3 if smoke else 10,
+        max_rounds=10 if smoke else 40, patience=3,
+    )
+    # Dense timing OUTSIDE the session — with one installed, the same
+    # layer call routes through the engine, so the two sides are the same
+    # moe_forward with/without the grouped-GEMM dispatch path.
+    dense_us = interleaved_minima([layer_call], **rounds).best_s[0] * 1e6
+
+    eng = Engine("host_cpu", empirical_levels=(() if smoke else None))
+    with vortex.use(eng):
+        y_eng = jax.block_until_ready(layer_call())  # warm: compile + AOT
+        before = {
+            k: eng.stats()["grouped_gemm"][k]
+            for k in ("launches", "padded_calls", "stage_copies")
+        }
+        layer_calls = 4 if smoke else 8
+        for _ in range(layer_calls):
+            jax.block_until_ready(layer_call())
+        after = {
+            k: eng.stats()["grouped_gemm"][k]
+            for k in ("launches", "padded_calls", "stage_copies")
+        }
+        engine_us = interleaved_minima([layer_call], **rounds).best_s[0] * 1e6
+
+    launches = after["launches"] - before["launches"]
+    max_abs = float(np.max(np.abs(np.asarray(y_eng) - np.asarray(y_dense))))
+    dropped = float(Lyr.moe_forward(p, x, cfg, rules)[2])
+    return {
+        "experts": m.num_experts,
+        "top_k": m.top_k,
+        "d_ff_expert": m.d_ff_expert,
+        "tokens": b * s,
+        "layer_calls": layer_calls,
+        # per projection: 3 grouped-GEMM dispatches per layer call, each
+        # must be exactly one launch for all experts.
+        "launches_per_moe_layer": launches / (3 * layer_calls),
+        "padded_calls": after["padded_calls"],
+        "stage_copies": after["stage_copies"] - before["stage_copies"],
+        "dropped_frac": dropped,
+        "engine_us_per_layer": engine_us,
+        "dense_us_per_layer": dense_us,
+        "max_abs_diff_vs_dense": max_abs,
+        "bit_identical_to_dense": max_abs == 0.0,
+    }
+
+
 def _bench_calibration(smoke: bool) -> dict:
     """Background-calibration quality section (BENCH_dispatch.json).
 
@@ -574,7 +669,9 @@ def serving_payload(smoke: bool) -> dict:
     """The BENCH_serving.json payload (benchmarks/run.py --json): dispatch
     overhead on unseen shapes, the aligned-vs-unaligned hot-path ratio and
     copies/launches per call (with raw per-round samples), the serving
-    decode contract, and the chained-prefill boundary-copy contract."""
+    decode contract, the chained-prefill boundary-copy contract, and the
+    MoE grouped-GEMM contract (one launch per projection for all
+    experts)."""
     hardware = "host_cpu"
     eng = Engine(hardware, empirical_levels=(() if smoke else None))
     hw = get_hardware(hardware)
@@ -600,6 +697,7 @@ def serving_payload(smoke: bool) -> dict:
         "decode": _bench_decode(smoke),
         "prefill_chain": _bench_prefill_chain(smoke),
         "continuous_batching": _bench_continuous_batching(smoke),
+        "moe": _bench_moe(smoke),
     }
 
 

@@ -18,13 +18,17 @@ the bucketed executable cache (engine.py) all operate on this protocol, so
 registering a new workload here is the ONLY step needed to route it through
 the sample-free pipeline end to end (DESIGN.md §3).
 
-Three workloads ship:
+The registered workloads:
 
-  * :class:`GemmWorkload`      — C[M,N] = A[M,K] @ B[K,N], dynamic M,
-  * :class:`AttentionWorkload` — flash attention, dynamic sequence length
+  * :class:`GemmWorkload`        — C[M,N] = A[M,K] @ B[K,N], dynamic M,
+  * :class:`GroupedGemmWorkload` — ragged batched GEMM over a shared expert
+    weight stack (MoE FFN), dynamic capacity with PER-GROUP runtime extents,
+  * :class:`AttentionWorkload`   — flash attention, dynamic sequence length
     (both GEMMs of attention share the seq-tiled lattice: the l1 m-tile is
     the query block, the l1 k-tile the key/value block),
-  * :class:`Conv2dWorkload`    — Conv2D through the im2col GEMM view,
+  * :class:`DecodeAttentionWorkload` — single-token decode against a
+    kv-bucketed cache (shares the attention lattice),
+  * :class:`Conv2dWorkload`      — Conv2D through the im2col GEMM view,
     dynamic batch/spatial (M = b*h'*w').
 """
 from __future__ import annotations
@@ -45,6 +49,7 @@ from repro.core.rkernel import (
 __all__ = [
     "Workload",
     "GemmWorkload",
+    "GroupedGemmWorkload",
     "AttentionWorkload",
     "DecodeAttentionWorkload",
     "Conv2dWorkload",
@@ -485,6 +490,196 @@ class GemmWorkload(Workload):
         from repro.kernels.ref import ref_gemm
 
         return ref_gemm(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM (ragged MoE expert FFN)
+# ---------------------------------------------------------------------------
+
+
+@register_workload
+@dataclasses.dataclass(frozen=True)
+class GroupedGemmWorkload(Workload):
+    """Ragged grouped GEMM: out[g] = x[g] @ w[g // (G//E)], per-group extents.
+
+    The MoE expert FFN after capacity-bucketed routing: G groups of
+    capacity-shaped ``(C, K)`` activation slabs multiply against a shared
+    ``(E, K, N)`` expert weight stack (``r = G // E`` consecutive groups —
+    expert-major layout — share each stack entry).  Only ``counts[g]`` rows
+    of slab g are real; the rest is routing pad.
+
+    This is the first workload whose DYNAMIC extent is a *routing outcome*
+    rather than an input length: the capacity C moves with how the router
+    distributed the batch's tokens, which is exactly the dynamism
+    sample-driven tuners cannot pre-enumerate.  The masked-tail contract
+    handles it unchanged — C buckets like any dynamic extent, and the true
+    extents ride into the kernel as a ``(G,)`` i32 vector (the per-row
+    ``kv_len`` contract of batched decode, lifted to per-group row counts).
+    One launch covers all G groups at any routing skew.
+
+    Selection prices the PER-GROUP ``(C, N, K)`` contraction view: G is a
+    constant multiplier on every candidate's time under Eq. 2-4, so the
+    per-group argmin is the whole-launch argmin and the plain-GEMM lattice
+    applies verbatim (``lattice_key`` shares the scored gemm lattice, like
+    decode shares prefill attention's).  ``flops()`` still reports the TRUE
+    G-scaled work.
+
+    Call signature: ``grouped_gemm(x, w, counts)`` with x ``(G, C, K)``,
+    w ``(E, K, N)``, counts ``(G,)`` i32.  Rows of ``x[g]`` at or past
+    ``counts[g]`` may hold arbitrary garbage (stale staging bytes, NaNs);
+    the matching output rows are exactly zero in every impl, which keeps
+    staged dispatch bit-identical to the zero-padded reference path.
+    """
+
+    C: int | None  # capacity (rows per group), dynamic
+    G: int  # total groups = E * groups_per_expert
+    E: int  # weight stack entries
+    N: int
+    K: int
+    dtype_bytes: int = 2
+    acc_bytes: int = 4
+    dynamic_dims: tuple[str, ...] = ("C",)
+
+    kind: ClassVar[str] = "grouped_gemm"
+    supports_staging: ClassVar[bool] = True
+    # stage_view only coerces counts; x could in principle arrive as a
+    # bucket handle on axis 1, but LazyBucket forwarding is axis-0/row
+    # oriented — keep the lazy contract opted out for now.
+    consumes_staged: ClassVar[dict[int, str]] = {}
+    staged_out_axis: ClassVar[int | None] = None
+
+    @classmethod
+    def bind(cls, x, w, counts) -> "GroupedGemmWorkload":
+        return cls(
+            C=None, G=x.shape[0], E=w.shape[0], N=w.shape[2], K=w.shape[1]
+        )
+
+    @classmethod
+    def dispatch_key(cls, x, w, counts) -> tuple:
+        return (x.shape[0], w.shape[0], w.shape[1], w.shape[2])
+
+    @property
+    def lattice_key(self) -> tuple:
+        # The per-group (C, N, K) view prices exactly like a plain GEMM of
+        # the same (N, K) — identical capacity/traffic models, and G is a
+        # constant factor across candidates so the ranking is unchanged.
+        # Share the scored gemm lattice (the literal GemmWorkload signature,
+        # so both workloads hash to one cache entry).
+        return (
+            "gemm", None, self.N, self.K,
+            self.dtype_bytes, self.acc_bytes, ("M",),
+        )
+
+    def runtime_dims(self, m_runtime: int | None = None) -> Tile:
+        c = self.C if m_runtime is None else m_runtime
+        assert c is not None, "runtime capacity required"
+        return (c, self.N, self.K)
+
+    def flops(self, m: int | None = None) -> float:
+        c = self.C if m is None else m
+        assert c is not None
+        return 2.0 * self.G * c * self.N * self.K  # true work, all groups
+
+    def program(self, hw: HardwareSpec) -> RKernelProgram:
+        return _make_program(
+            hw,
+            self.kind,
+            {
+                0: ("load_tile_to_reg", "store_reg", "dot"),
+                1: ("copy_hbm_to_vmem", "copy_vmem_to_hbm", ""),
+            },
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def dynamic_extent(self, x, w, counts) -> int:
+        return x.shape[1]
+
+    def stage_view(self, x, w, counts) -> tuple:
+        # Coerce list/tuple/int-dtype counts to a concrete (G,) i32 array so
+        # the steady-state call matches the AOT artifact's dtypes; traced
+        # and already-i32 values pass through.
+        if isinstance(counts, (list, tuple)) or (
+            getattr(counts, "dtype", None) != np.int32
+            and not hasattr(counts, "aval")
+        ):
+            counts = np.asarray(counts, np.int32).reshape(self.G)
+        return x, w, counts
+
+    def staged_shapes(self, sel, x, w, counts) -> tuple:
+        # Only the activation slabs are bucket-shaped (on the capacity
+        # axis); weights and the counts vector pass through unstaged.
+        return ((self.G, sel.padded_m, self.K), None, None)
+
+    def runtime_scalars(self, sel, x, w, counts) -> tuple:
+        return ()  # the per-group extents already ride in the view
+
+    def prepare(self, sel, x, w, counts) -> tuple:
+        import jax.numpy as jnp
+
+        cp = sel.padded_m
+        if cp != x.shape[1]:
+            x = jnp.pad(x, ((0, 0), (0, cp - x.shape[1]), (0, 0)))
+        return x, w, counts
+
+    def finalize(self, sel, out, x, w, counts):
+        c = x.shape[1]
+        return out[:, :c] if sel.padded_m != c else out
+
+    def build_executable(self, sel, *, impl: str, interpret: bool):
+        import jax.numpy as jnp
+
+        m1, n1, k1 = sel.strategy.l1
+        _check_bucket_tiles(self.kind, sel, (("c", sel.padded_m, m1),))
+        G, E, K = self.G, self.E, self.K
+
+        if impl == "pallas":
+            from repro.kernels.grouped_gemm import vortex_grouped_gemm
+
+            def fn(x, w, counts):
+                return vortex_grouped_gemm(
+                    x, w, counts, block_m=m1, block_n=n1, block_k=k1,
+                    interpret=interpret,
+                )
+
+        else:
+
+            def fn(x, w, counts):
+                # Mask rows at each group's extent BEFORE the matmul: the
+                # staged pad tail is garbage, and rows past counts[g] must
+                # come out exactly zero (the kernel contract).  The einsum
+                # over the (E, r, C, K) reshape shares the weight stack
+                # without materializing a per-group copy.
+                cb = x.shape[1]
+                valid = (
+                    jnp.arange(cb)[None, :]
+                    < jnp.asarray(counts, jnp.int32).reshape(G, 1)
+                )
+                xf = jnp.where(valid[..., None], x.astype(jnp.float32), 0)
+                out = jnp.einsum(
+                    "erck,ekn->ercn",
+                    xf.reshape(E, G // E, cb, K),
+                    w.astype(jnp.float32),
+                )
+                return out.reshape(G, cb, -1).astype(x.dtype)
+
+        return fn
+
+    def example_args(self, sel, *args) -> tuple:
+        import jax.numpy as jnp
+
+        dx = args[0].dtype if args else jnp.float32
+        dw = args[1].dtype if args else jnp.float32
+        return (
+            jnp.zeros((self.G, sel.padded_m, self.K), dx),
+            jnp.zeros((self.E, self.K, self.N), dw),
+            np.zeros((self.G,), np.int32),
+        )
+
+    def reference(self, x, w, counts):
+        from repro.kernels.ref import ref_grouped_gemm
+
+        return ref_grouped_gemm(x, w, counts)
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "ref_gemm",
+    "ref_grouped_gemm",
     "ref_attention",
     "chunked_attention",
     "ref_conv2d",
@@ -25,6 +26,33 @@ def ref_gemm(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
         a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
     return out.astype(out_dtype or a.dtype)
+
+
+def ref_grouped_gemm(
+    x: jax.Array, w: jax.Array, counts=None, out_dtype=None
+) -> jax.Array:
+    """out[g] = x[g] @ w[g // (G // E)] — ragged grouped GEMM oracle.
+
+    x ``(G, C, K)``, w ``(E, K, N)``; groups are expert-major (``r = G//E``
+    consecutive groups share a weight stack entry).  ``counts`` (optional
+    ``(G,)`` runtime i32) marks each group's real rows: rows at or past it
+    may hold arbitrary garbage (staged-bucket pad) and are masked to zero
+    BEFORE the matmul, so the matching output rows are exactly zero.
+    """
+    G, C, K = x.shape
+    E = w.shape[0]
+    r = G // E
+    xf = x.astype(jnp.float32)
+    if counts is not None:
+        valid = (
+            jnp.arange(C)[None, :]
+            < jnp.asarray(counts, jnp.int32).reshape(G, 1)
+        )
+        xf = jnp.where(valid[..., None], xf, 0)
+    out = jnp.einsum(
+        "erck,ekn->ercn", xf.reshape(E, r, C, K), w.astype(jnp.float32)
+    )
+    return out.reshape(G, C, -1).astype(out_dtype or x.dtype)
 
 
 def _mask(

@@ -668,6 +668,16 @@ def mamba_forward(
 
     if mode == "decode":
         assert cache is not None
+        if s != 1:
+            # The conv-window concat below assumes EXACTLY one new token:
+            # with s > 1 it builds a (b, dc-1+s, di) window whose [:, 1:]
+            # slice silently writes a mis-sized/mis-aligned conv state back
+            # into the cache (state corruption, no shape error downstream).
+            raise ValueError(
+                "mamba_forward(mode='decode') consumes one token per step; "
+                f"got s={s}. Feed multi-token input through mode='prefill' "
+                "(which rebuilds the conv state from the tail) instead."
+            )
         # Conv state: the last (dc-1) pre-conv inputs, (b, dc-1, di).
         conv_st = cache["conv"]
         window = jnp.concatenate([conv_st, x_in], axis=1)  # (b, dc, di)
@@ -920,9 +930,43 @@ def block_forward_lazy(
 
 
 def _expert_ffn(
-    p: dict, buf: jax.Array, cfg: ModelConfig
+    p: dict, buf: jax.Array, cfg: ModelConfig, counts: jax.Array | None = None
 ) -> jax.Array:
-    """buf: (g, E, C, d) -> (g, E, C, d) through per-expert FFNs."""
+    """buf: (g, E, C, d) -> (g, E, C, d) through per-expert FFNs.
+
+    ``counts`` (optional (g, E) i32) is each expert slab's TRUE row count —
+    rows past it are routing pad (zero-filled by ``moe_forward``).  When an
+    engine session is installed and the call is eager, the three dense
+    einsums collapse to three ``grouped_gemm`` dispatches: ONE bucketed
+    masked-tail launch each for all g*E expert slabs, with the capacity as
+    the dynamic (bucketed) extent and the per-slab counts riding in as the
+    runtime extent vector.  The inline einsums below stay the bit-identical
+    fallback for sessionless callers and for traced calls inside scanned
+    model blocks (where engine-owned staging buffers must not be captured).
+    """
+    engine = session.installed_engine()
+    if (
+        engine is not None
+        and counts is not None
+        and not isinstance(buf, jax.core.Tracer)
+    ):
+        g, E, C, d = buf.shape
+        # Expert-major group layout: (g, E, C, d) -> (E*g, C, d), so the
+        # r = g consecutive groups of each expert share one weight-stack
+        # entry (the grouped_gemm contract: weight index = group // r).
+        xs = jnp.transpose(buf, (1, 0, 2, 3)).reshape(E * g, C, d)
+        cnt = jnp.transpose(
+            jnp.asarray(counts, jnp.int32), (1, 0)
+        ).reshape(E * g)
+        h = engine.dispatch("grouped_gemm", xs, p["w_in"], cnt)
+        gate = (
+            engine.dispatch("grouped_gemm", xs, p["w_gate"], cnt)
+            if "w_gate" in p else None
+        )
+        h = _glu_act(cfg, h, gate)
+        out = engine.dispatch("grouped_gemm", h, p["w_out"], cnt)
+        return jnp.transpose(out.reshape(E, g, C, d), (1, 0, 2, 3))
+
     h = jnp.einsum("gecd,edf->gecf", buf, p["w_in"])
     g = (
         jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
@@ -934,13 +978,19 @@ def _expert_ffn(
 
 def moe_forward(
     p: dict, x: jax.Array, cfg: ModelConfig, rules: AxisRules
-) -> tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Top-k routed MoE with sort-based, capacity-bounded dispatch.
 
     The batch dim doubles as the GShard "group": routing, sorting and
     capacity-dropping are per-sequence, so the sort never crosses the
     data-parallel shard boundary.  Expert buffers are sharded over the
-    expert (EP) axis.  Returns (y, aux_load_balance_loss).
+    expert (EP) axis.  Returns ``(y, aux_load_balance_loss, dropped_frac)``
+    — ``dropped_frac`` is the fraction of (token, choice) assignments the
+    capacity bound silently zeroed (a dropped assignment contributes 0 to
+    its token's weighted combine, NOT a renormalized mix of the surviving
+    experts); it is exactly 0 whenever every expert's load fits its
+    capacity, which capacity_factor >= 1.0 guarantees only under perfectly
+    uniform routing.
     """
     m = cfg.moe
     assert m is not None
@@ -997,11 +1047,21 @@ def moe_forward(
     token_idx = src_flat // k                          # (g, E*C) token idx
     buf = jnp.take_along_axis(x, token_idx[..., None], axis=1)
     buf = jnp.where(valid.reshape(b, E * C, 1), buf, 0).reshape(b, E, C, d)
-    if s > 1:  # decode: let XLA psum tiny activations over FSDP shards
-        buf = constrain(buf, rules, "batch", "expert", None, None)
-
-    out_buf = _expert_ffn(p, buf, cfg)
+    # Per-(group, expert) TRUE row counts: ``valid`` marks a contiguous
+    # prefix of each slab (the sorted segment, capacity-clipped), so the
+    # sum IS the extent the grouped-GEMM kernel masks at.
+    counts = jnp.sum(valid.astype(jnp.int32), axis=-1)  # (g, E)
     if s > 1:
+        # Prefill: pin the expert buffers to the (batch, expert) sharding
+        # so the FFN einsums partition over the EP axis.
+        buf = constrain(buf, rules, "batch", "expert", None, None)
+    # s == 1 (decode): skip the pin — constraining tiny single-token
+    # activations makes XLA all-gather the FSDP-sharded expert weights
+    # instead of psum'ing the small activations (same pathology as the
+    # routing note above; observed 20x regression on deepseek decode).
+
+    out_buf = _expert_ffn(p, buf, cfg, counts=counts)
+    if s > 1:  # prefill: keep the output on the same (batch, expert) pin
         out_buf = constrain(out_buf, rules, "batch", "expert", None, None)
     out_flat = out_buf.reshape(b, E * C, d)
 
@@ -1010,7 +1070,11 @@ def moe_forward(
     inv = jnp.argsort(order, axis=-1)                  # flat -> sorted pos
     first_of = jnp.take_along_axis(first, flat_e, axis=-1)   # (g, S)
     pos_in_e = inv - first_of
+    # Capacity bound: assignments past an expert's C-th slot are DROPPED —
+    # their contribution to the weighted combine is zero.  Surface the
+    # drop rate instead of losing tokens silently.
     kept = pos_in_e < C
+    dropped_frac = 1.0 - jnp.mean(kept.astype(jnp.float32))
     out_idx = jnp.minimum(flat_e * C + pos_in_e, E * C - 1)
     y_tok = jnp.take_along_axis(out_flat, out_idx[..., None], axis=1)
     y_tok = jnp.where(kept[..., None], y_tok, 0).astype(jnp.float32)
@@ -1022,4 +1086,4 @@ def moe_forward(
         g = x @ p["shared_gate"] if "shared_gate" in p else None
         h = _glu_act(cfg, h, g)
         y = y + h @ p["shared_out"]
-    return y, aux
+    return y, aux, dropped_frac

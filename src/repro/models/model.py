@@ -166,8 +166,9 @@ def _apply_layer(
     encoder_out: jax.Array | None,
     causal: bool = True,
     use_rope: bool = True,
-) -> tuple[jax.Array, dict | None, jax.Array]:
+) -> tuple[jax.Array, dict | None, jax.Array, jax.Array]:
     aux = jnp.zeros((), jnp.float32)
+    dropped = jnp.zeros((), jnp.float32)
     h = norm(x, p["norm_mixer"], cfg)
     if spec.mixer == "attn":
         y, new_cache = attn_forward(
@@ -192,13 +193,13 @@ def _apply_layer(
         if spec.mlp == "dense":
             y = mlp_forward(p["mlp"], h, cfg, rules)
         else:
-            y, aux = moe_forward(p["moe"], h, cfg, rules)
+            y, aux, dropped = moe_forward(p["moe"], h, cfg, rules)
         x = x + y
     if mode != "decode":
         # Decode streams are tiny (s=1): pinning their batch axis flips
         # XLA from activation-psum to FSDP weight gathers (§Perf log).
         x = constrain(x, rules, "batch", "seq", None)
-    return x, new_cache, aux
+    return x, new_cache, aux, dropped
 
 
 def _encode(
@@ -216,7 +217,7 @@ def _encode(
     spec = LayerSpec(mixer="attn", mlp="dense")
 
     def body(x, p):
-        x, _, _ = _apply_layer(
+        x, _, _, _ = _apply_layer(
             cfg, spec, rules, p, x,
             mode="train", positions=pos, cache=None, pos=None,
             cache_len=0, encoder_out=None, causal=False, use_rope=False,
@@ -240,7 +241,8 @@ def forward(
     vision_embeds: jax.Array | None = None,
     encoder_frames: jax.Array | None = None,
     remat: bool = True,
-) -> tuple[jax.Array, dict | None, jax.Array]:
+    return_moe_stats: bool = False,
+) -> tuple:
     """Run the model.
 
     Args:
@@ -254,8 +256,12 @@ def forward(
         (VLM frontend stub) — overwrite the first positions' embeddings.
       encoder_frames: (b, encoder_seq, d) precomputed audio-frame embeddings
         (audio frontend stub) for encoder-decoder configs.
+      return_moe_stats: append a routing-stats dict to the return tuple —
+        currently ``{"dropped_frac": mean fraction of (token, choice)
+        assignments zeroed by the MoE capacity bound, averaged over MoE
+        layers}``.  Kept opt-in so the default 3-tuple stays stable.
     Returns:
-      (logits, new_cache | None, aux_loss)
+      (logits, new_cache | None, aux_loss[, moe_stats])
     """
     b, s = tokens.shape
     d = cfg.d_model
@@ -295,16 +301,17 @@ def forward(
 
     positions = None if mode == "decode" else jnp.arange(s)
     aux_total = jnp.zeros((), jnp.float32)
+    dropped_total = jnp.zeros((), jnp.float32)
     new_cache: dict[str, Any] = {}
 
     n_pos = len(cfg.pattern)
 
     def group_body(carry, xs):
-        x, aux = carry
+        x, aux, dropped = carry
         p_slices, c_slices = xs
         new_c = []
         for i in range(n_pos):
-            x, nc, aux_i = _apply_layer(
+            x, nc, aux_i, dropped_i = _apply_layer(
                 cfg, cfg.pattern[i], rules, p_slices[i], x,
                 mode=mode, positions=positions,
                 cache=c_slices[i] if c_slices is not None else None,
@@ -313,8 +320,9 @@ def forward(
             )
             new_c.append(nc)
             aux = aux + aux_i
+            dropped = dropped + dropped_i
         ys = tuple(new_c) if mode != "train" else None
-        return (x, aux), ys
+        return (x, aux, dropped), ys
 
     if remat and mode == "train":
         group_body = jax.checkpoint(
@@ -326,8 +334,8 @@ def forward(
         tuple(cache[f"pos{i}"] for i in range(n_pos))
         if mode == "decode" else None
     )
-    (x, aux_total), ys = jax.lax.scan(
-        group_body, (x, aux_total), (p_stacked, c_stacked)
+    (x, aux_total, dropped_total), ys = jax.lax.scan(
+        group_body, (x, aux_total, dropped_total), (p_stacked, c_stacked)
     )
     if ys is not None:
         for i in range(n_pos):
@@ -352,7 +360,13 @@ def forward(
             jnp.int32, logits.shape, logits.ndim - 1
         )
         logits = jnp.where(col < cfg.vocab, logits, -1e30)
-    return logits, (new_cache or None), aux_total / max(cfg.n_layers, 1)
+    ret = (logits, new_cache or None, aux_total / max(cfg.n_layers, 1))
+    if return_moe_stats:
+        n_moe = cfg.n_groups * sum(
+            1 for spec in cfg.pattern if spec.mlp == "moe"
+        )
+        ret += ({"dropped_frac": dropped_total / max(n_moe, 1)},)
+    return ret
 
 
 def loss_fn(
@@ -365,13 +379,22 @@ def loss_fn(
     aux_weight: float = 0.01,
     **fwd_kwargs,
 ) -> tuple[jax.Array, dict]:
-    """Mean next-token cross entropy (+ weighted MoE aux loss)."""
-    logits, _, aux = forward(
-        cfg, rules, params, tokens, mode="train", **fwd_kwargs
+    """Mean next-token cross entropy (+ weighted MoE aux loss).
+
+    Metrics carry ``dropped_frac`` next to the aux loss: the capacity bound
+    zeroes over-capacity expert assignments SILENTLY in the forward pass,
+    so the drop rate must be observable wherever the loss is.
+    """
+    logits, _, aux, moe_stats = forward(
+        cfg, rules, params, tokens, mode="train", return_moe_stats=True,
+        **fwd_kwargs
     )
     lf = logits.astype(jnp.float32)
     lse = jax.scipy.special.logsumexp(lf, axis=-1)
     ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
     xent = jnp.mean(lse - ll)
     total = xent + aux_weight * aux
-    return total, {"xent": xent, "aux": aux}
+    return total, {
+        "xent": xent, "aux": aux,
+        "dropped_frac": moe_stats["dropped_frac"],
+    }

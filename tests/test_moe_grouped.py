@@ -1,0 +1,213 @@
+"""MoE numerics + the engine-served grouped-GEMM expert FFN.
+
+Three surfaces:
+
+  * the gather-only sort dispatch of ``moe_forward`` against a NAIVE
+    loop-over-experts reference — bit-identical when capacity admits every
+    assignment, and matching the documented drop semantics (an expert keeps
+    its first C assignments in flat (token, choice) order; dropped
+    assignments contribute exactly zero, no renormalization) below it;
+  * ``dropped_frac``: 0 when nothing is dropped, > 0 and exact when the
+    capacity bound bites;
+  * the engine path: with a session installed, ``_expert_ffn`` serves all
+    experts through exactly ONE grouped-GEMM launch per projection (three
+    per MoE layer), zero padded calls, bit-identical to the inline dense
+    einsums — and the inline fallback is untouched without a session.
+
+Plus the decode-mode ``mamba_forward`` multi-token guard.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.vortex as vortex
+from repro.configs.granite_moe_1b import SMOKE
+from repro.models import layers as L
+from repro.models.partitioning import AxisRules
+
+RULES = AxisRules(rules={}, mesh_axes=())
+RNG = np.random.default_rng(7)
+
+
+def _moe_params(cfg, scale=0.05):
+    m = cfg.moe
+    d, E, dff = cfg.d_model, m.num_experts, m.d_ff_expert
+    mk = lambda *s: jnp.asarray(RNG.normal(size=s) * scale, jnp.float32)
+    return {
+        "router": mk(d, E),
+        "w_in": mk(E, d, dff),
+        "w_gate": mk(E, d, dff),
+        "w_out": mk(E, dff, d),
+    }
+
+
+def _with_capacity(cfg, capacity_factor):
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=capacity_factor)
+    )
+
+
+def _naive_moe(p, x, cfg):
+    """Loop-over-experts reference with explicit FIFO capacity drops.
+
+    Routing matches ``moe_forward`` (same router/top-k/renormalize); each
+    expert admits its first C assignments in flat (token, choice) order —
+    the order the stable argsort dispatch preserves — and every dropped
+    assignment contributes 0.  Returns (y, dropped_frac).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    E, k = m.num_experts, m.top_k
+    C = max(1, int(math.ceil(s * k * m.capacity_factor / E)))
+    xf = x.astype(jnp.float32)
+    probs = jax.nn.softmax(jnp.einsum("gtd,de->gte", xf, p["router"]), -1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = np.asarray(topw / jnp.sum(topw, axis=-1, keepdims=True))
+    topi = np.asarray(topi)
+
+    def ffn(e, rows):
+        # rows: (n, d) through expert e — the same jnp elementary ops as
+        # the inline einsums so bit-identity is meaningful (a numpy BLAS
+        # matmul rounds differently at the ulp level).
+        h = rows @ p["w_in"][e]
+        g = rows @ p["w_gate"][e]
+        return np.asarray(L._glu_act(cfg, h, g) @ p["w_out"][e])
+
+    xn = np.asarray(x)
+    y = np.zeros((b, s, d), np.float32)
+    dropped = 0
+    for g in range(b):
+        admitted = {e: 0 for e in range(E)}
+        for t in range(s):
+            for j in range(k):
+                e = int(topi[g, t, j])
+                if admitted[e] >= C:
+                    dropped += 1
+                    continue
+                admitted[e] += 1
+                y[g, t] += topw[g, t, j] * ffn(e, jnp.asarray(xn[g, t][None]))[0]
+    return y.astype(np.asarray(x).dtype), dropped / (b * s * k)
+
+
+@pytest.mark.parametrize("shape", [(1, 16), (2, 33)])
+def test_moe_sort_dispatch_matches_naive_loop_no_drops(shape):
+    """At a capacity factor admitting every assignment, the gather-only
+    sorted dispatch is BIT-IDENTICAL to the naive per-expert loop and
+    dropped_frac is exactly 0."""
+    b, s = shape
+    cfg = _with_capacity(SMOKE, float(SMOKE.moe.num_experts))
+    p = _moe_params(cfg)
+    x = jnp.asarray(RNG.normal(size=(b, s, cfg.d_model)), jnp.float32)
+    y, aux, dropped = L.moe_forward(p, x, cfg, RULES)
+    assert float(dropped) == 0.0
+    y_ref, dropped_ref = _naive_moe(p, x, cfg)
+    assert dropped_ref == 0.0
+    np.testing.assert_array_equal(np.asarray(y), y_ref)
+
+
+def test_moe_capacity_drops_are_surfaced_and_match_naive_fifo():
+    """Below capacity the bound bites: dropped_frac reports the exact
+    dropped fraction and the output matches the naive FIFO drop
+    semantics (first-come within the flat (token, choice) order)."""
+    cfg = _with_capacity(SMOKE, 0.25)
+    p = _moe_params(cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    y, aux, dropped = L.moe_forward(p, x, cfg, RULES)
+    y_ref, dropped_ref = _naive_moe(p, x, cfg)
+    assert dropped_ref > 0.0, "test must exercise the capacity bound"
+    assert float(dropped) == pytest.approx(dropped_ref, abs=1e-6)
+    np.testing.assert_array_equal(np.asarray(y), y_ref)
+
+
+def test_moe_engine_one_grouped_launch_per_projection():
+    """With a session installed, the eager MoE layer serves every expert
+    through ONE grouped-GEMM launch per projection (w_in, w_gate, w_out =
+    3 per layer call), zero padded calls, bit-identical to the inline
+    dense einsums."""
+    cfg = SMOKE
+    p = _moe_params(cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 33, cfg.d_model)), jnp.float32)
+    y_inline, aux0, drop0 = L.moe_forward(p, x, cfg, RULES)
+
+    eng = vortex.Engine("host_cpu", empirical_levels=(), impl="xla")
+    with vortex.use(eng):
+        y_eng, aux1, drop1 = L.moe_forward(p, x, cfg, RULES)
+        y_eng2, _, _ = L.moe_forward(p, x, cfg, RULES)
+    d = eng.stats()["grouped_gemm"]
+    assert d["launches"] == 6  # 2 calls x 3 projections, all experts each
+    assert d["padded_calls"] == 0
+    np.testing.assert_array_equal(np.asarray(y_eng), np.asarray(y_inline))
+    np.testing.assert_array_equal(np.asarray(y_eng2), np.asarray(y_inline))
+    np.testing.assert_array_equal(np.asarray(aux1), np.asarray(aux0))
+    np.testing.assert_array_equal(np.asarray(drop1), np.asarray(drop0))
+
+    # Inline fallback after the session closes: no new engine traffic.
+    y_after, _, _ = L.moe_forward(p, x, cfg, RULES)
+    np.testing.assert_array_equal(np.asarray(y_after), np.asarray(y_inline))
+    assert eng.stats()["grouped_gemm"]["launches"] == 6
+
+
+def test_moe_engine_granite_shapes_serve_through_engine():
+    """granite_moe_1b-shaped expert stacks (32 experts, top-8, d_ff 512)
+    route through the engine — the acceptance shape of the workload."""
+    from repro.configs.granite_moe_1b import CONFIG
+
+    cfg = dataclasses.replace(
+        CONFIG, d_model=128,
+        moe=dataclasses.replace(CONFIG.moe, d_ff_expert=64),
+    )
+    p = _moe_params(cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 64, cfg.d_model)), jnp.float32)
+    y_inline, _, _ = L.moe_forward(p, x, cfg, RULES)
+    eng = vortex.Engine("host_cpu", empirical_levels=(), impl="xla")
+    with vortex.use(eng):
+        y_eng, _, _ = L.moe_forward(p, x, cfg, RULES)
+    d = eng.stats()["grouped_gemm"]
+    assert d["launches"] == 3 and d["padded_calls"] == 0
+    np.testing.assert_array_equal(np.asarray(y_eng), np.asarray(y_inline))
+
+
+def test_moe_traced_calls_keep_functional_path():
+    """Inside an enclosing jit the layer must not capture engine-owned
+    buffers: the inline einsums serve the traced call, numerics
+    unchanged."""
+    cfg = SMOKE
+    p = _moe_params(cfg)
+    x = jnp.asarray(RNG.normal(size=(1, 16, cfg.d_model)), jnp.float32)
+    y_eager, _, _ = L.moe_forward(p, x, cfg, RULES)
+
+    eng = vortex.Engine("host_cpu", empirical_levels=(), impl="xla")
+    with vortex.use(eng):
+        y_jit = jax.jit(
+            lambda xx: L.moe_forward(p, xx, cfg, RULES)[0]
+        )(x)
+    assert "grouped_gemm" not in eng.stats()
+    np.testing.assert_allclose(
+        np.asarray(y_jit), np.asarray(y_eager), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mamba_decode_rejects_multi_token_input():
+    """decode mode consumes exactly one token: a multi-token slab would
+    silently corrupt the conv state, so it must raise a typed error."""
+    from repro.configs.falcon_mamba_7b import CONFIG as MAMBA
+
+    di = 8
+    p = {"in_proj": jnp.zeros((4, 2 * di), jnp.float32)}
+    cfg = dataclasses.replace(
+        MAMBA, d_model=4,
+        ssm=dataclasses.replace(
+            MAMBA.ssm, d_inner=di, d_state=4, d_conv=4, dt_rank=2
+        ),
+    )
+    cache = {"conv": jnp.zeros((1, 3, di)), "ssm": jnp.zeros((1, di, 4))}
+    with pytest.raises(ValueError, match="one token per step"):
+        L.mamba_forward(
+            p, jnp.zeros((1, 2, 4), jnp.float32), cfg, RULES,
+            mode="decode", cache=cache,
+        )

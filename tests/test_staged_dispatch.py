@@ -64,8 +64,17 @@ def _conv_args(m):
     return (_arr((1, 1, m, 5)), _arr((1, 1, 5, 7)))
 
 
+def _grouped_args(m):
+    # 6 groups over 3 experts (r = 2 groups per stack entry); ragged
+    # per-group extents — several strictly below the capacity m — so the
+    # per-group masked-tail contract is exercised at every probe extent.
+    counts = np.clip(np.array([m, 1, 0, m - 1, 2, m]), 0, m).astype(np.int32)
+    return (_arr((6, m, 96)), _arr((3, 96, 80)), jnp.asarray(counts))
+
+
 KIND_CASES = [
     ("gemm", {}, _gemm_args),
+    ("grouped_gemm", {}, _grouped_args),
     ("attention", {}, _attn_args),
     ("decode_attention", {}, _decode_args),
     ("conv2d", {}, _conv_args),
@@ -153,6 +162,14 @@ def test_unaligned_dispatch_is_one_launch_plus_boundary_copies():
     assert d["launches"] == 1
     assert d["stage_copies"] == 2  # only the k/v cache buffers stage
     assert d["unstage_copies"] == 0  # out is (b, h, 1, d): nothing to slice
+    assert d["padded_calls"] == 0
+
+    xg, wg, cg = _grouped_args(61)
+    eng.dispatch("grouped_gemm", xg, wg, cg)
+    d = eng.stats()["grouped_gemm"]
+    assert d["launches"] == 1  # ONE launch for all 6 ragged groups
+    assert d["stage_copies"] == 1  # only x stages; w and counts pass through
+    assert d["unstage_copies"] == 1
     assert d["padded_calls"] == 0
 
 
